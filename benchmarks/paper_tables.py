@@ -1,0 +1,154 @@
+"""Benchmarks reproducing the paper's tables/figures (scaled to this
+container; the paper's claims are *ratios*, which transfer):
+
+* ``bench_incremental_speedup`` — Fig 10 + Table 4: static peel vs
+  incremental reorder per edge, batch sizes |ΔE| ∈ {1, 10, 100, 1K}.
+* ``bench_edge_grouping``       — Table 5: IncXG vs IncX-1K elapsed/edge.
+* ``bench_prevention``          — Fig 9a / §5.2: prevention ratio & latency.
+* ``bench_device_plane``        — TPU-native plane: bulk peel + incremental
+  maintenance wall-times (CPU backend; ratios again).
+
+Every row prints ``name,us_per_call,derived`` CSV (derived = speedup /
+ratio / aux metric for that row).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.metrics import make_metric
+from repro.core.reference import AdjGraph, detect, insert_edges, static_peel
+from repro.core.spade import Spade
+from repro.graphstore.generators import make_transaction_stream
+from repro.serve.service import run_service
+
+Row = tuple[str, float, float]
+
+
+def _build_graph(metric, stream, frac=1.0):
+    m = int(stream.base_src.shape[0] * frac)
+    sp = Spade(metric=metric)
+    sp.LoadGraph(stream.base_src[:m], stream.base_dst[:m], stream.base_amt[:m],
+                 n_vertices=stream.n_vertices)
+    return sp
+
+
+def bench_incremental_speedup(
+    n=16000, m=100000, n_inc=2000, batches=(1, 10, 100, 1000), seed=0
+) -> list[Row]:
+    """Fig 10 / Table 4 (wiki-vote-scale replica)."""
+    rows: list[Row] = []
+    stream = make_transaction_stream(n=n, m=m, inc_fraction=0.05, seed=seed)
+    for name in ("DG", "DW", "FD"):
+        sp = _build_graph(name, stream)
+        # static from-scratch run (the per-insertion cost of the baseline)
+        t0 = time.perf_counter()
+        static_peel(sp.graph.copy())
+        t_static = time.perf_counter() - t0
+        rows.append((f"fig10_static_{name}", t_static * 1e6, 1.0))
+
+        inc = list(zip(stream.inc_src.tolist(), stream.inc_dst.tolist(),
+                       stream.inc_amt.tolist()))[:n_inc]
+        for b in batches:
+            spb = _build_graph(name, stream)
+            t0 = time.perf_counter()
+            i = 0
+            while i < len(inc):
+                spb.InsertBatchEdges(inc[i : i + b])
+                i += b
+            dt = time.perf_counter() - t0
+            us_per_edge = dt / len(inc) * 1e6
+            speedup = (t_static * 1e6) / max(us_per_edge, 1e-9)
+            rows.append((f"table4_Inc{name}_batch{b}", us_per_edge, speedup))
+    return rows
+
+
+def bench_edge_grouping(n=16000, m=100000, n_inc=2000, seed=1) -> list[Row]:
+    """Table 5: edge grouping (IncXG) vs fixed 1K batches (IncX-1K)."""
+    rows: list[Row] = []
+    stream = make_transaction_stream(n=n, m=m, inc_fraction=0.05, seed=seed)
+    inc = list(zip(stream.inc_src.tolist(), stream.inc_dst.tolist(),
+                   stream.inc_amt.tolist()))[:n_inc]
+    for name in ("DG", "DW", "FD"):
+        # fixed 1K batches
+        sp = _build_graph(name, stream)
+        t0 = time.perf_counter()
+        for i in range(0, len(inc), 1000):
+            sp.InsertBatchEdges(inc[i : i + 1000])
+        t_batch = (time.perf_counter() - t0) / len(inc) * 1e6
+        # grouping: benign edges buffer, urgent flush immediately
+        spg = Spade(metric=name, edge_grouping=True)
+        spg.LoadGraph(stream.base_src, stream.base_dst, stream.base_amt,
+                      n_vertices=stream.n_vertices)
+        t0 = time.perf_counter()
+        for e in inc:
+            spg.InsertEdge(*e)
+        spg.FlushBuffer()
+        t_group = (time.perf_counter() - t0) / len(inc) * 1e6
+        rows.append((f"table5_Inc{name}-1K", t_batch, 1.0))
+        rows.append((f"table5_Inc{name}G", t_group, t_batch / max(t_group, 1e-9)))
+    return rows
+
+
+def bench_prevention(seed=2) -> list[Row]:
+    """Fig 9a / §5.2: prevention ratio + detection latency, grouping on/off."""
+    rows: list[Row] = []
+    for grouping in (False, True):
+        stream = make_transaction_stream(n=8000, m=40000, seed=seed)
+        rep = run_service(stream, metric="DW", edge_grouping=grouping,
+                          batch_size=1, flush_every=0.5)
+        tag = "grouping" if grouping else "batch1"
+        rows.append((f"fig9a_prevention_{tag}", rep.mean_us_per_edge,
+                     rep.prevention_ratio if rep.prevention_ratio is not None else -1.0))
+        rows.append((f"fig9a_recall_{tag}", rep.mean_us_per_edge, rep.fraud_recall))
+        rows.append((f"fig11_latency_{tag}", rep.mean_us_per_edge,
+                     rep.detection_latency_s if rep.detection_latency_s is not None else -1.0))
+    return rows
+
+
+def bench_device_plane(seed=3) -> list[Row]:
+    """TPU-native plane on the CPU backend: bulk peel + incremental tick."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.incremental import init_state, insert_and_maintain
+    from repro.core.peel import bulk_peel
+    from repro.graphstore.structs import device_graph_from_coo
+
+    rows: list[Row] = []
+    rng = np.random.default_rng(seed)
+    n, m = 100_000, 400_000
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    g = device_graph_from_coo(n, src[keep], dst[keep],
+                              np.ones(keep.sum(), np.float32),
+                              e_capacity=keep.sum() + 65536)
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(bulk_peel(g, eps=0.1))
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(bulk_peel(g, eps=0.1))
+    t_bulk = time.perf_counter() - t0
+    rows.append(("device_bulk_peel_100k", t_bulk * 1e6, float(res.n_rounds)))
+    rows.append(("device_bulk_peel_compile", t_first * 1e6, t_first / max(t_bulk, 1e-9)))
+
+    state = init_state(g, eps=0.1)
+    B = 1024
+    bs = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+    bd = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+    bc = jnp.ones(B, jnp.float32)
+    valid = bs != bd
+    state = jax.block_until_ready(
+        insert_and_maintain(state, bs, bd, bc, valid, eps=0.1)
+    )  # compile
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        state = insert_and_maintain(state, bs, bd, bc, valid, eps=0.1)
+    jax.block_until_ready(state.best_g)
+    t_inc = (time.perf_counter() - t0) / reps
+    rows.append(("device_incremental_1024", t_inc * 1e6, t_inc / B * 1e6))
+    return rows

@@ -1,0 +1,126 @@
+"""Roofline harness (§g): per (arch x shape) on the single-pod mesh, derive
+the three roofline terms from compiled artifacts with *exact trip-count
+accounting* and emit the table consumed by EXPERIMENTS.md.
+
+Method (DESIGN.md §6): XLA ``cost_analysis`` counts while-loop bodies once,
+so production (scan-over-layers) lowerings under-report.  The harness
+therefore lowers *unrolled* analysis variants; for deep LMs it uses the
+**secant-depth method** — lower unrolled depth-2 and depth-4 variants,
+then
+
+    per_layer = (cost(4) - cost(2)) / 2        (layers are identical)
+    total(L)  = cost(2) + (L - 2) * per_layer
+
+which is exact for layer-uniform programs and keeps single-core compile
+times tractable.  GNN/recsys/spade cells are shallow enough to unroll
+fully.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline --out results/roofline \
+      [--arch A --shape S] [--family lm]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.launch.dryrun import run_cell  # sets XLA device-count flag on import
+from repro.configs import ARCH_FAMILY, ARCHS, Skip, arch_shapes, get_config
+
+_COST_KEYS = (
+    "flops_per_chip",
+    "bytes_per_chip",
+    "collective_bytes_per_chip",
+    "t_compute_s",
+    "t_memory_s",
+    "t_collective_s",
+)
+
+
+def _combine_secant(c2: dict, c4: dict, L: int) -> dict:
+    out = dict(c4)
+    for k in _COST_KEYS:
+        per_layer = (c4[k] - c2[k]) / 2.0
+        out[k] = c2[k] + (L - 2) * per_layer
+    for c in out.get("collectives", {}):
+        per_layer = (c4["collectives"][c] - c2["collectives"][c]) / 2.0
+        out["collectives"][c] = c2["collectives"][c] + (L - 2) * per_layer
+    out["dominant"] = max(
+        [("compute", out["t_compute_s"]), ("memory", out["t_memory_s"]),
+         ("collective", out["t_collective_s"])], key=lambda kv: kv[1]
+    )[0]
+    out["method"] = f"secant(L=2,4 -> {L})"
+    return out
+
+
+def roofline_cell(arch: str, shape: str, verbose: bool = True) -> dict:
+    fam = ARCH_FAMILY[arch]
+    spec = arch_shapes(arch)[shape]
+    if isinstance(spec, Skip):
+        return {"arch": arch, "shape": shape, "status": "SKIP", "reason": spec.reason}
+    if fam == "lm":
+        cfg = get_config(arch)
+        c2 = run_cell(arch, shape, "single", verbose=False, roofline=True,
+                      override_layers=2)
+        c4 = run_cell(arch, shape, "single", verbose=False, roofline=True,
+                      override_layers=4)
+        if c2["status"] != "OK" or c4["status"] != "OK":
+            return c2 if c2["status"] != "OK" else c4
+        res = _combine_secant(c2, c4, cfg.n_layers)
+        # model_flops from the TRUE config (the depth-override variants carry
+        # a reduced-depth analytic count)
+        from repro.launch.cells import build_cell
+
+        full = build_cell(arch, shape, concrete=False)
+        res["model_flops"] = full.model_flops
+        res["useful_flops_ratio"] = (
+            full.model_flops / (res["flops_per_chip"] * res["n_chips"])
+            if res["flops_per_chip"] > 0 else 0.0
+        )
+    else:
+        res = run_cell(arch, shape, "single", verbose=False, roofline=True)
+        res["method"] = "full-unroll"
+    if verbose and res.get("status") == "OK":
+        print(
+            f"[{arch} x {shape}] compute={res['t_compute_s']:.3e}s "
+            f"memory={res['t_memory_s']:.3e}s coll={res['t_collective_s']:.3e}s "
+            f"dominant={res['dominant']} useful={res['useful_flops_ratio']:.2f} "
+            f"({res['method']})"
+        )
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape")
+    ap.add_argument("--family", choices=["lm", "gnn", "recsys", "spade"])
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+
+    cells = []
+    if args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    else:
+        for arch in ARCHS:
+            if args.family and ARCH_FAMILY[arch] != args.family:
+                continue
+            for shape in arch_shapes(arch):
+                cells.append((arch, shape))
+
+    os.makedirs(args.out, exist_ok=True)
+    fails = 0
+    for arch, shape in cells:
+        res = roofline_cell(arch, shape)
+        if res.get("status") == "FAIL":
+            fails += 1
+            print(f"[{arch} x {shape}] FAIL {res.get('error')}")
+        with open(os.path.join(args.out, f"{arch}__{shape}.json"), "w") as f:
+            json.dump(res, f, indent=1)
+    print(f"roofline done: {len(cells)} cells, {fails} failures")
+
+
+if __name__ == "__main__":
+    main()

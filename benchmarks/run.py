@@ -1,0 +1,41 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV (derived: speedup/ratio per row).
+The roofline/dry-run artifacts are produced separately by
+``repro.launch.dryrun`` and ``benchmarks.roofline`` (multi-process, 512
+host devices) and assembled by ``benchmarks.report``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller graphs")
+    args = ap.parse_args()
+
+    from benchmarks.paper_tables import (
+        bench_device_plane,
+        bench_edge_grouping,
+        bench_incremental_speedup,
+        bench_prevention,
+    )
+
+    kw = dict(n=4000, m=20000, n_inc=600) if args.quick else {}
+    rows = []
+    rows += bench_incremental_speedup(**kw)
+    rows += bench_edge_grouping(**({"n": 4000, "m": 20000, "n_inc": 600} if args.quick else {}))
+    rows += bench_prevention()
+    rows += bench_device_plane()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived:.4f}")
+
+
+if __name__ == "__main__":
+    main()

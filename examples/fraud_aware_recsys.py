@@ -1,0 +1,61 @@
+"""Paper-integration example: Spade guards the retrieval model's training
+pipeline (DESIGN.md §4) — the transaction stream that would train the
+two-tower model is first routed through the benign/urgent classifier;
+transactions incident to the maintained fraud community are quarantined.
+
+    PYTHONPATH=src python examples/fraud_aware_recsys.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import Spade
+from repro.graphstore.generators import make_transaction_stream
+from repro.models.two_tower import RecsysBatch, init_two_tower_params, two_tower_loss
+from repro.train.optimizer import AdamConfig, init_train_state
+from repro.train.train_step import make_train_step
+
+# 1. fraud plane: maintain the community over the evolving transaction graph
+stream = make_transaction_stream(n=4000, m=20000, seed=3)
+sp = Spade(metric="DW", edge_grouping=True)
+sp.LoadGraph(stream.base_src, stream.base_dst, stream.base_amt,
+             n_vertices=stream.n_vertices)
+
+quarantined, clean = [], []
+for u, v, amt in zip(stream.inc_src, stream.inc_dst, stream.inc_amt):
+    res = sp.InsertEdge(int(u), int(v), float(amt))
+    comm = set(res.fraudsters.tolist()) if res.triggered else set()
+    if int(u) in comm or int(v) in comm:
+        quarantined.append((int(u), int(v)))
+    else:
+        clean.append((int(u), int(v), float(amt)))
+frauds = set(sp.Detect()[0].tolist())
+quarantined += [(u, v) for (u, v, a) in clean if u in frauds or v in frauds]
+clean = [(u, v, a) for (u, v, a) in clean if u not in frauds and v not in frauds]
+print(f"stream: {len(clean)} clean / {len(quarantined)} quarantined transactions")
+
+# 2. training plane: two-tower retrieval on the CLEAN transactions only
+cfg = get_smoke_config("two-tower-retrieval")
+params = init_two_tower_params(jax.random.PRNGKey(0), cfg)
+state = init_train_state(params)
+step = make_train_step(lambda p, b: two_tower_loss(p, b, cfg),
+                       AdamConfig(lr=1e-3, warmup_steps=1, weight_decay=0.0))
+
+rng = np.random.default_rng(0)
+B = 32
+for it in range(20):
+    take = rng.integers(0, len(clean), B)
+    users = np.array([clean[i][0] for i in take]) % cfg.user_vocab
+    items = np.array([clean[i][1] for i in take]) % cfg.item_vocab
+    batch = RecsysBatch(
+        user_idx=jnp.asarray(np.tile(users[:, None, None], (1, cfg.n_user_fields, cfg.multi_hot)), jnp.int32),
+        user_wt=jnp.ones((B, cfg.n_user_fields, cfg.multi_hot), jnp.float32),
+        item_idx=jnp.asarray(np.tile(items[:, None, None], (1, cfg.n_item_fields, cfg.multi_hot)), jnp.int32),
+        item_wt=jnp.ones((B, cfg.n_item_fields, cfg.multi_hot), jnp.float32),
+        log_q=jnp.zeros(B, jnp.float32),
+    )
+    state, metrics = step(state, batch)
+print(f"retrieval training on clean stream: loss={float(metrics['loss']):.3f} "
+      f"acc={float(metrics['in_batch_acc']):.2f}")

@@ -1,0 +1,51 @@
+"""Device-plane example: bulk peeling + incremental maintenance of a
+million-edge evolving graph with the TPU-native engine (runs on CPU here;
+the same program is what the multi-pod dry-run shards over 512 chips).
+
+    PYTHONPATH=src python examples/multi_pod_fraud_scan.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.incremental import benign_mask, init_state, insert_and_maintain
+from repro.graphstore.generators import make_power_law_graph
+from repro.graphstore.structs import device_graph_from_coo
+
+n, m = 200_000, 1_000_000
+src, dst, amt = make_power_law_graph(n, m, seed=0, alpha=0.5)
+# plant a fraud ring
+ring = np.arange(50)
+rs = np.repeat(ring, 20)
+rd = ring[(np.arange(rs.shape[0]) * 7) % 50]
+keep = rs != rd
+src = np.concatenate([src, rs[keep]])
+dst = np.concatenate([dst, rd[keep]])
+amt = np.concatenate([amt, np.full(keep.sum(), 100.0)])
+
+g = device_graph_from_coo(n, src, dst, amt.astype(np.float32),
+                          e_capacity=src.shape[0] + 1 << 20)
+t0 = time.perf_counter()
+state = init_state(g, eps=0.1)
+jax.block_until_ready(state.best_g)
+print(f"bulk peel over {src.shape[0]:,} edges: {time.perf_counter()-t0:.2f}s, "
+      f"g_best={float(state.best_g):.1f}, "
+      f"community={int(state.community.sum())} vertices")
+
+rng = np.random.default_rng(1)
+B = 4096
+for tick in range(3):
+    bs = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+    bd = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+    bc = jnp.ones(B, jnp.float32)
+    valid = bs != bd
+    bm = benign_mask(state, bs, bd, bc)
+    t0 = time.perf_counter()
+    state = insert_and_maintain(state, bs, bd, bc, valid, eps=0.1)
+    jax.block_until_ready(state.best_g)
+    print(f"tick {tick}: {int(valid.sum())} edges ({int(bm.sum())} benign) "
+          f"maintained in {time.perf_counter()-t0:.3f}s, "
+          f"g_best={float(state.best_g):.1f}")

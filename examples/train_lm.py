@@ -1,0 +1,19 @@
+"""Train a reduced LM (same code path as the production launcher) for a few
+hundred steps with checkpointing + straggler watchdog.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+The full-size configs are exercised via the multi-pod dry-run; this driver
+is the end-to-end training loop at CPU-feasible scale.
+"""
+
+import argparse
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "qwen3-14b", "--smoke",
+            "--steps", (sys.argv[sys.argv.index("--steps") + 1]
+                        if "--steps" in sys.argv else "60"),
+            "--ckpt-dir", "/tmp/repro_lm_ckpt"]
+from repro.launch.train import main  # noqa: E402
+
+main()

@@ -1,0 +1,114 @@
+"""Architecture registry: ``--arch <id>`` ids map to config modules.
+
+``get_config(arch)`` -> full config; ``get_smoke_config(arch)`` -> reduced
+same-family config; ``ARCH_FAMILY`` -> 'lm' | 'gnn' | 'recsys' | 'spade';
+``arch_shapes(arch)`` -> {shape_name: ShapeSpec | SkipReason}.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from repro.configs.base import (
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    SPADE_SHAPES,
+    GNNConfig,
+    LMConfig,
+    MoESpec,
+    RecsysConfig,
+    ShapeSpec,
+    SpadeConfig,
+)
+
+__all__ = [
+    "ARCHS",
+    "ARCH_FAMILY",
+    "get_config",
+    "get_smoke_config",
+    "arch_shapes",
+    "Skip",
+    "all_cells",
+]
+
+_MODULES = {
+    "mixtral-8x7b": "mixtral_8x7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "internlm2-20b": "internlm2_20b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "qwen3-14b": "qwen3_14b",
+    "meshgraphnet": "meshgraphnet",
+    "gat-cora": "gat_cora",
+    "dimenet": "dimenet",
+    "gcn-cora": "gcn_cora",
+    "two-tower-retrieval": "two_tower_retrieval",
+    "spade-grab": "spade_grab",
+}
+
+ARCHS = tuple(_MODULES)
+
+ARCH_FAMILY = {
+    "mixtral-8x7b": "lm",
+    "olmoe-1b-7b": "lm",
+    "internlm2-20b": "lm",
+    "deepseek-coder-33b": "lm",
+    "qwen3-14b": "lm",
+    "meshgraphnet": "gnn",
+    "gat-cora": "gnn",
+    "dimenet": "gnn",
+    "gcn-cora": "gnn",
+    "two-tower-retrieval": "recsys",
+    "spade-grab": "spade",
+}
+
+
+@dataclass(frozen=True)
+class Skip:
+    reason: str
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str):
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str):
+    return _module(arch).SMOKE_CONFIG
+
+
+def arch_shapes(arch: str) -> dict[str, ShapeSpec | Skip]:
+    fam = ARCH_FAMILY[arch]
+    if fam == "lm":
+        cfg: LMConfig = get_config(arch)
+        out: dict[str, ShapeSpec | Skip] = dict(LM_SHAPES)
+        if cfg.sliding_window is None:
+            # long_500k requires sub-quadratic attention; pure full-attention
+            # archs skip it (DESIGN.md §4) — SWA archs (mixtral) run it.
+            out["long_500k"] = Skip(
+                "full-attention arch: 524288-token dense KV cache is not "
+                "sub-quadratic; SWA/SSM archs only"
+            )
+        return out
+    if fam == "gnn":
+        return dict(GNN_SHAPES)
+    if fam == "recsys":
+        return dict(RECSYS_SHAPES)
+    if fam == "spade":
+        return dict(SPADE_SHAPES)
+    raise KeyError(arch)
+
+
+def all_cells(include_spade: bool = True):
+    """Every (arch, shape) cell — 40 assigned + the paper's own workload."""
+    cells = []
+    for arch in ARCHS:
+        if ARCH_FAMILY[arch] == "spade" and not include_spade:
+            continue
+        for shape, spec in arch_shapes(arch).items():
+            cells.append((arch, shape, spec))
+    return cells

@@ -1,0 +1,44 @@
+"""Spade core: peeling algorithms, incremental maintenance, fraud semantics.
+
+Host plane (exact oracle): :mod:`repro.core.reference`, :mod:`repro.core.spade`.
+Device plane (JAX/TPU):    :mod:`repro.core.peel`, :mod:`repro.core.incremental`.
+Metrics API:               :mod:`repro.core.metrics` (DG / DW / FD, VSusp/ESusp).
+"""
+
+from .metrics import DG, DW, FD, DensityMetric, make_fd, make_metric
+from .reference import (
+    AdjGraph,
+    PeelState,
+    ReorderStats,
+    delete_edge,
+    density_sequence,
+    detect,
+    enumerate_communities,
+    insert_edges,
+    peeling_weights_full,
+    recompute,
+    static_peel,
+)
+from .spade import InsertResult, Spade
+
+__all__ = [
+    "AdjGraph",
+    "PeelState",
+    "ReorderStats",
+    "DensityMetric",
+    "DG",
+    "DW",
+    "FD",
+    "make_fd",
+    "make_metric",
+    "static_peel",
+    "insert_edges",
+    "delete_edge",
+    "enumerate_communities",
+    "detect",
+    "density_sequence",
+    "peeling_weights_full",
+    "recompute",
+    "Spade",
+    "InsertResult",
+]

@@ -1,0 +1,50 @@
+"""Device-plane suspiciousness weighting (DG/DW/FD parity with
+:mod:`repro.core.metrics`, vectorized).
+
+The host plane evaluates ``esusp`` per edge at arrival; the device plane
+weights whole batches at once.  FD's column weighting needs the live
+destination in-degree — maintained as an int32 vector updated with the
+same scatter that appends the edges.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dg_weights", "dw_weights", "fd_weights", "fd_batch_weights"]
+
+
+def dg_weights(amounts: jax.Array) -> jax.Array:
+    """DG: unweighted — every transaction counts 1."""
+    return jnp.ones_like(amounts, dtype=jnp.float32)
+
+
+def dw_weights(amounts: jax.Array) -> jax.Array:
+    """DW: transaction amount (clamped positive)."""
+    return jnp.maximum(amounts.astype(jnp.float32), 1e-12)
+
+
+def fd_weights(in_deg_dst: jax.Array, C: float = 5.0) -> jax.Array:
+    """FD column weighting 1/log(x + C) given destination in-degrees."""
+    return 1.0 / jnp.log(in_deg_dst.astype(jnp.float32) + C)
+
+
+def fd_batch_weights(
+    in_deg: jax.Array, dst: jax.Array, valid: jax.Array, C: float = 5.0
+) -> tuple[jax.Array, jax.Array]:
+    """Weight a batch FD-style with *arrival-time* degrees (host parity:
+    each edge sees the degree including earlier edges of the same batch).
+
+    Returns (edge weights, updated in_deg vector).
+    """
+    ones = valid.astype(jnp.int32)
+    # degree of dst at each edge's arrival = stored degree + # earlier batch
+    # edges with the same dst (exclusive running count via segment trick)
+    B = dst.shape[0]
+    same = (dst[:, None] == dst[None, :]) & valid[None, :] & valid[:, None]
+    earlier = jnp.tril(same, k=-1).sum(axis=1)
+    deg_at_arrival = in_deg[dst] + earlier
+    w = jnp.where(valid, 1.0 / jnp.log(deg_at_arrival.astype(jnp.float32) + C), 0.0)
+    new_deg = in_deg.at[dst].add(ones, mode="drop")
+    return w, new_deg

@@ -1,0 +1,168 @@
+"""Device-plane incremental maintenance (the paper's §4, TPU-native).
+
+The host oracle reorders an explicit peeling sequence with a pending heap;
+on TPU the same *affected-area* idea becomes a **warm suffix re-peel**:
+
+1. Each vertex carries the ``level`` (bulk-peel round) at which it was
+   peeled during the last maintenance pass.  The set
+   ``{u : level[u] >= r}`` is exactly the active set at the start of round
+   ``r`` (nested family — the vectorized analogue of the peel sequence).
+2. An inserted batch only raises the weights of its endpoints (Lemma 4.1's
+   vectorized form); with ``r0 = min_{endpoints} level``, every set before
+   round ``r0`` is untouched, so maintenance re-peels only
+   ``keep = level >= r0`` with weights/f recovered w.r.t. that suffix.
+3. Thresholds inside the warm re-peel are computed on the *current*
+   restricted set, so each round remains a valid generalized peeling step
+   and the global ``2(1+eps)`` guarantee is preserved (proof sketch in
+   DESIGN.md §2); the maintained best density never regresses because
+   insertions only increase ``f`` of any set containing the endpoints.
+
+New vertices are admitted with ``level = INT32_MAX`` (always inside the
+re-peeled suffix without dragging ``r0`` down).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.peel import PeelResultDevice, bulk_peel, bulk_peel_warm
+from repro.graphstore.structs import DeviceGraph, append_edges
+
+__all__ = [
+    "DeviceSpadeState",
+    "init_state",
+    "insert_and_maintain",
+    "full_refresh",
+    "benign_mask",
+]
+
+_LEVEL_NEW = jnp.int32(2**31 - 1)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["graph", "level", "best_g", "community", "edge_count", "w0"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class DeviceSpadeState:
+    """Evolving-graph fraud-detection state (pure pytree, donate-friendly).
+
+    ``w0[u]`` mirrors the full-graph peeling weight ``w_u(S_0)`` for the
+    O(1) benign/urgent test (Def 4.1).
+    """
+
+    graph: DeviceGraph
+    level: jax.Array  # int32 [V_cap] peel round per vertex
+    best_g: jax.Array  # float32 scalar — maintained best density
+    community: jax.Array  # bool [V_cap] — maintained S^P
+    edge_count: jax.Array  # int32 scalar — next free edge slot
+    w0: jax.Array  # float32 [V_cap]
+
+
+def init_state(g: DeviceGraph, eps: float = 0.1) -> DeviceSpadeState:
+    """Static bulk peel (Algorithm 1, bulk form) to seed the state."""
+    res = bulk_peel(g, eps=eps)
+    return DeviceSpadeState(
+        graph=g,
+        level=res.level,
+        best_g=res.best_g,
+        community=res.community_mask() & g.vertex_mask,
+        edge_count=jnp.sum(g.edge_mask).astype(jnp.int32),
+        w0=g.peel_weights(),
+    )
+
+
+def benign_mask(state: DeviceSpadeState, src, dst, c) -> jax.Array:
+    """Vectorized Def 4.1: an edge is benign iff *both* endpoint tests fail
+    the urgency condition ``w_u(S_0) + c >= g(S^P)``."""
+    urgent = (state.w0[src] + c >= state.best_g) | (state.w0[dst] + c >= state.best_g)
+    return ~urgent
+
+
+@partial(jax.jit, static_argnames=("eps", "max_rounds", "unroll"),
+         donate_argnames=("state",))
+def insert_and_maintain(
+    state: DeviceSpadeState,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    unroll: bool = False,
+) -> DeviceSpadeState:
+    """Insert an edge batch and maintain the community incrementally.
+
+    ``src/dst/c`` are fixed-size batch arrays with a ``valid`` mask
+    (streaming ticks pad to the batch size).  One fused device program:
+    append -> affected-suffix recovery -> warm bulk re-peel -> state merge.
+    """
+    g = append_edges(state.graph, state.edge_count, src, dst, c, valid=valid)
+    n_new = jnp.sum(valid).astype(jnp.int32)
+
+    # affected suffix start: min endpoint level over the valid batch
+    lvl_src = jnp.where(valid, state.level[src], _LEVEL_NEW)
+    lvl_dst = jnp.where(valid, state.level[dst], _LEVEL_NEW)
+    r0 = jnp.minimum(jnp.min(lvl_src), jnp.min(lvl_dst))
+    r0 = jnp.where(n_new > 0, r0, _LEVEL_NEW)  # empty batch: re-peel nothing
+    r0 = jnp.minimum(r0, jnp.int32(2**30))  # overflow-safe rebasing
+    keep = state.level >= r0
+
+    res = bulk_peel_warm(g, keep, prior_best_g=state.best_g, eps=eps,
+                         max_rounds=max_rounds, unroll=unroll)
+
+    # rebase suffix levels above the untouched prefix; vertices still active
+    # at a max_rounds cutoff conceptually peel in the final round
+    suffix_level = jnp.where(res.level >= 0, res.level, res.n_rounds)
+    new_level = jnp.where(keep, r0 + suffix_level, state.level)
+    improved = res.best_g > state.best_g
+    new_comm = jnp.where(
+        improved,
+        (res.level >= res.best_level) & keep & g.vertex_mask,
+        state.community,
+    )
+    w0 = state.w0
+    cv = jnp.where(valid, c.astype(jnp.float32), 0.0)
+    w0 = w0.at[src].add(cv, mode="drop")
+    w0 = w0.at[dst].add(cv, mode="drop")
+    return DeviceSpadeState(
+        graph=g,
+        level=new_level,
+        best_g=jnp.maximum(res.best_g, state.best_g),
+        community=new_comm,
+        edge_count=state.edge_count + n_new,
+        w0=w0,
+    )
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def full_refresh(state: DeviceSpadeState, eps: float = 0.1) -> DeviceSpadeState:
+    """Periodic from-scratch bulk peel (compaction / drift control)."""
+    res = bulk_peel(state.graph, eps=eps)
+    return DeviceSpadeState(
+        graph=state.graph,
+        level=res.level,
+        best_g=res.best_g,
+        community=res.community_mask() & state.graph.vertex_mask,
+        edge_count=state.edge_count,
+        w0=state.graph.peel_weights(),
+    )
+
+
+def admit_vertices(state: DeviceSpadeState, ids: jax.Array, a: jax.Array) -> DeviceSpadeState:
+    """Activate new vertex ids (host-orchestrated; ids within capacity)."""
+    g = state.graph
+    vm = g.vertex_mask.at[ids].set(True, mode="drop")
+    av = g.a.at[ids].set(a.astype(jnp.float32), mode="drop")
+    return dataclasses.replace(
+        state,
+        graph=dataclasses.replace(g, vertex_mask=vm, a=av),
+        level=state.level.at[ids].set(_LEVEL_NEW, mode="drop"),
+        w0=state.w0.at[ids].set(a.astype(jnp.float32), mode="drop"),
+    )

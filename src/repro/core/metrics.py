@@ -1,0 +1,105 @@
+"""Density metrics and the VSusp/ESusp programmability API (paper §3).
+
+A *density metric* is ``g(S) = f(S)/|S|`` with
+``f(S) = Σ a_i + Σ c_ij`` (Eq. 1).  Spade supports any metric expressible
+through two user hooks (Property 3.1: arithmetic density, ``a_i ≥ 0``,
+``c_ij > 0``):
+
+* ``vsusp(u, graph) -> a_u``   — vertex suspiciousness (prior/side info)
+* ``esusp(u, v, graph) -> c``  — edge suspiciousness, evaluated at edge
+  arrival time (the paper's C++ snippet reads the live degree, so e.g.
+  Fraudar's column weighting uses the destination degree *at insertion*).
+
+Instances (paper Appendix F):
+
+* **DG**  (Charikar [6])        — ``esusp = 1``,   ``vsusp = 0``
+* **DW**  (Gudapati et al. [18])— ``esusp = c_ij`` (transaction amount)
+* **FD**  (Fraudar, Hooi [19])  — ``vsusp = a_u`` side info,
+  ``esusp = 1/log(deg(dst) + C)`` with ``C = 5``
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .reference import AdjGraph
+
+__all__ = ["DensityMetric", "DG", "DW", "FD", "make_metric"]
+
+VSuspFn = Callable[[int, AdjGraph], float]
+ESuspFn = Callable[[int, int, float, AdjGraph], float]
+
+
+@dataclass(frozen=True)
+class DensityMetric:
+    """A pluggable fraud-semantics definition (the paper's VSusp/ESusp pair).
+
+    ``esusp`` receives ``(src, dst, raw_weight, graph)`` where ``raw_weight``
+    is the application payload on the transaction (e.g. amount); it must
+    return a strictly positive suspiciousness.  ``vsusp`` receives
+    ``(vertex, graph)`` and must return a nonnegative prior.
+    """
+
+    name: str
+    vsusp: VSuspFn
+    esusp: ESuspFn
+
+    def vertex_susp(self, u: int, g: AdjGraph) -> float:
+        a = float(self.vsusp(u, g))
+        if a < 0:
+            raise ValueError(f"{self.name}: vsusp must be >= 0, got {a}")
+        return a
+
+    def edge_susp(self, u: int, v: int, raw: float, g: AdjGraph) -> float:
+        c = float(self.esusp(u, v, raw, g))
+        if c <= 0:
+            raise ValueError(f"{self.name}: esusp must be > 0, got {c}")
+        return c
+
+
+# ---------------------------------------------------------------------------
+# Paper instances
+# ---------------------------------------------------------------------------
+
+DG = DensityMetric(
+    name="DG",
+    vsusp=lambda u, g: 0.0,
+    esusp=lambda u, v, raw, g: 1.0,
+)
+
+DW = DensityMetric(
+    name="DW",
+    vsusp=lambda u, g: 0.0,
+    esusp=lambda u, v, raw, g: max(float(raw), 1e-12),
+)
+
+
+def _fd_esusp(u: int, v: int, raw: float, g: AdjGraph, C: float = 5.0) -> float:
+    # Fraudar column weighting: 1/log(x + C) with x the degree of the object
+    # (destination) vertex at arrival time.
+    x = float(g.in_deg[v]) if v < g.n else 0.0
+    return 1.0 / math.log(x + C)
+
+
+def make_fd(vertex_prior: Callable[[int], float] | None = None) -> DensityMetric:
+    """Fraudar with an optional per-vertex side-information prior."""
+    prior = vertex_prior or (lambda u: 0.0)
+    return DensityMetric(
+        name="FD",
+        vsusp=lambda u, g: float(prior(u)),
+        esusp=_fd_esusp,
+    )
+
+
+FD = make_fd()
+
+_REGISTRY = {"DG": DG, "DW": DW, "FD": FD, "dg": DG, "dw": DW, "fd": FD}
+
+
+def make_metric(name: str) -> DensityMetric:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown metric {name!r}; choose from DG/DW/FD") from None

@@ -1,0 +1,2 @@
+"""Data pipeline: synthetic token batches, transaction streams (see
+repro.graphstore.generators), graph batch builders (see repro.launch.cells)."""

@@ -1,0 +1,5 @@
+from .checkpoint import CheckpointManager, latest_step, load_pytree, save_pytree
+from .elastic import ElasticPlan, StepWatchdog, best_mesh_for, replan
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree", "latest_step",
+           "StepWatchdog", "best_mesh_for", "replan", "ElasticPlan"]

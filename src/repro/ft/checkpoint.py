@@ -1,0 +1,157 @@
+"""Async sharded checkpointing (no orbax in this environment — built from
+scratch): per-leaf .npy shards + JSON manifest, atomic rename commit,
+keep-last-k retention, async writer thread, restore with *resharding*
+(restore onto any mesh: leaves are device_put against target shardings).
+
+Layout:
+  <dir>/step_000420.tmp/...   (in-flight)
+  <dir>/step_000420/manifest.json + leaf_<i>.npy   (committed)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree", "latest_step"]
+
+
+def _leaf_paths(tree: Any) -> list[str]:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+def save_pytree(tree: Any, directory: str, step: int) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "paths": _leaf_paths(tree),
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "shapes": [list(np.asarray(x).shape) for x in leaves],
+        "time": time.time(),
+    }
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), np.asarray(leaf))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(directory, d, "manifest.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def load_pytree(
+    like: Any, directory: str, step: int | None = None, shardings: Any = None
+) -> Any:
+    """Restore into the structure of ``like``; ``shardings`` (optional
+    matching pytree of NamedSharding) re-shards onto the *current* mesh —
+    this is the elastic-restart path (checkpoint saved on N hosts, restored
+    on M)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert len(leaves_like) == manifest["n_leaves"], "tree structure changed"
+    out = []
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(leaves_like)
+    )
+    for i, (ref, sh) in enumerate(zip(leaves_like, shard_leaves)):
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.device_put(arr))
+    return treedef.unflatten(out)
+
+
+class CheckpointManager:
+    """Async writer with keep-k retention and save-every-N policy."""
+
+    def __init__(self, directory: str, keep: int = 3, every_steps: int = 100):
+        self.directory = directory
+        self.keep = keep
+        self.every_steps = every_steps
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self._errors: list[Exception] = []
+
+    def maybe_save(self, tree: Any, step: int, force: bool = False) -> bool:
+        if not force and (step % self.every_steps != 0):
+            return False
+        # snapshot to host before enqueueing (donated buffers stay valid)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._q.put((host_tree, step))
+        return True
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            tree, step = item
+            try:
+                save_pytree(tree, self.directory, step)
+                self._gc()
+            except Exception as e:  # surfaced via .check()
+                self._errors.append(e)
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+
+    def wait(self) -> None:
+        self._q.join() if False else self._drain()
+
+    def _drain(self) -> None:
+        while not self._q.empty():
+            time.sleep(0.01)
+        time.sleep(0.05)  # let the in-flight write commit
+
+    def check(self) -> None:
+        if self._errors:
+            raise self._errors[0]
+
+    def close(self) -> None:
+        self._drain()
+        self._q.put(None)
+        self._worker.join(timeout=10)

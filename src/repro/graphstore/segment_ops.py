@@ -1,0 +1,129 @@
+"""Segment-op substrate: the message-passing primitive for GNNs, peeling,
+and embedding bags (JAX has no EmbeddingBag / CSR — this module IS that
+layer, built on ``jax.ops.segment_sum`` / gather).
+
+Also provides the padded-CSR blocking used by the Pallas ``gather_segsum``
+kernel (fixed nonzeros per row block; long rows split across blocks).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "segment_sum",
+    "segment_mean",
+    "segment_max",
+    "segment_softmax",
+    "gather_scatter_sum",
+    "embedding_bag",
+    "PaddedCSR",
+    "build_padded_csr",
+]
+
+
+def segment_sum(data, segment_ids, num_segments):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments, eps: float = 1e-9):
+    s = jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+    ones = jnp.ones(data.shape[:1], dtype=data.dtype)
+    cnt = jax.ops.segment_sum(ones, segment_ids, num_segments=num_segments)
+    return s / jnp.maximum(cnt, eps)[(...,) + (None,) * (data.ndim - 1)]
+
+
+def segment_max(data, segment_ids, num_segments):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_softmax(logits, segment_ids, num_segments):
+    """Numerically-stable softmax over variable-length segments (edge
+    softmax for GAT)."""
+    m = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    z = jnp.exp(logits - m[segment_ids])
+    denom = jax.ops.segment_sum(z, segment_ids, num_segments=num_segments)
+    return z / (denom[segment_ids] + 1e-9)
+
+
+def gather_scatter_sum(x, src_idx, dst_idx, num_segments, edge_weight=None):
+    """The GNN aggregation: out[d] = sum_{edges e: dst=d} w_e * x[src_e].
+
+    = SpMM with a COO adjacency; the Pallas kernel in
+    ``repro.kernels.gather_segsum`` implements the same contract.
+    """
+    msgs = x[src_idx]
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None]
+    return jax.ops.segment_sum(msgs, dst_idx, num_segments=num_segments)
+
+
+def embedding_bag(table, indices, offsets_ids, num_bags, weights=None, combine="sum"):
+    """EmbeddingBag (torch parity, built from gather + segment ops).
+
+    ``indices``: flat int32 lookups into ``table``; ``offsets_ids``: bag id
+    per lookup.  ``combine`` in {sum, mean}.
+    """
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if combine == "sum":
+        return jax.ops.segment_sum(rows, offsets_ids, num_segments=num_bags)
+    if combine == "mean":
+        return segment_mean(rows, offsets_ids, num_bags)
+    raise ValueError(f"combine={combine}")
+
+
+# ---------------------------------------------------------------------------
+# padded CSR blocking (for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+class PaddedCSR(NamedTuple):
+    """Fixed-shape CSR blocks: ``rows x nnz_per_block`` column indices.
+
+    ``col[b, j]`` is the source index of the j-th nonzero handled by block
+    b; ``row[b, j]`` its destination row; padding entries point at row
+    ``num_rows`` (dropped).  Every block owns a contiguous row range, long
+    rows are split across consecutive blocks (their partial sums scatter-add
+    into the same row).
+    """
+
+    col: np.ndarray  # int32 [n_blocks, nnz_per_block]
+    row: np.ndarray  # int32 [n_blocks, nnz_per_block]
+    val: np.ndarray  # float32 [n_blocks, nnz_per_block]
+    num_rows: int
+    nnz_per_block: int
+
+
+def build_padded_csr(
+    dst: np.ndarray,
+    src: np.ndarray,
+    val: np.ndarray | None,
+    num_rows: int,
+    nnz_per_block: int = 1024,
+) -> PaddedCSR:
+    """Pack COO (sorted by dst) into fixed-size blocks."""
+    dst = np.asarray(dst, np.int32)
+    src = np.asarray(src, np.int32)
+    order = np.argsort(dst, kind="stable")
+    dst, src = dst[order], src[order]
+    v = (
+        np.ones(dst.shape[0], np.float32)
+        if val is None
+        else np.asarray(val, np.float32)[order]
+    )
+    nnz = dst.shape[0]
+    n_blocks = max(1, (nnz + nnz_per_block - 1) // nnz_per_block)
+    tot = n_blocks * nnz_per_block
+    pad = tot - nnz
+    col = np.concatenate([src, np.zeros(pad, np.int32)]).reshape(n_blocks, -1)
+    row = np.concatenate([dst, np.full(pad, num_rows, np.int32)]).reshape(n_blocks, -1)
+    vv = np.concatenate([v, np.zeros(pad, np.float32)]).reshape(n_blocks, -1)
+    return PaddedCSR(col=col, row=row, val=vv, num_rows=num_rows,
+                     nnz_per_block=nnz_per_block)

@@ -1,0 +1,148 @@
+"""Device-resident graph structures (fixed-capacity, shard-ready).
+
+TPU/XLA requires static shapes, so the evolving transaction graph lives in
+fixed-capacity COO buffers with validity masks.  Edge insertion appends into
+pre-allocated slots; capacity growth is a host-side reallocation (amortized,
+off the latency path).  All fields are leading-dim shardable:
+
+* edge arrays ``src/dst/c/edge_mask``  → partitioned over ``(pod, data)``
+* vertex arrays ``a/vertex_mask``      → replicated or sharded over ``model``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DeviceGraph", "device_graph_from_coo", "append_edges", "csr_sort"]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src", "dst", "c", "edge_mask", "a", "vertex_mask"],
+    meta_fields=["n_capacity", "e_capacity"],
+)
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """Fixed-capacity COO transaction graph on device.
+
+    ``src[i] -> dst[i]`` with suspiciousness ``c[i]`` where ``edge_mask[i]``.
+    Invalid slots carry ``src = dst = n_capacity - 1`` padding self-loops with
+    ``c = 0`` so segment ops need no extra masking of indices.
+    """
+
+    src: jax.Array  # int32 [E_cap]
+    dst: jax.Array  # int32 [E_cap]
+    c: jax.Array  # float32 [E_cap]
+    edge_mask: jax.Array  # bool [E_cap]
+    a: jax.Array  # float32 [V_cap] vertex suspiciousness
+    vertex_mask: jax.Array  # bool [V_cap]
+    n_capacity: int
+    e_capacity: int
+
+    @property
+    def n_vertices(self) -> jax.Array:
+        return jnp.sum(self.vertex_mask)
+
+    @property
+    def n_edges(self) -> jax.Array:
+        return jnp.sum(self.edge_mask)
+
+    def f_total(self) -> jax.Array:
+        """f(V): total graph suspiciousness (Eq. 1)."""
+        return jnp.sum(jnp.where(self.vertex_mask, self.a, 0.0)) + jnp.sum(
+            jnp.where(self.edge_mask, self.c, 0.0)
+        )
+
+    def peel_weights(self) -> jax.Array:
+        """w_u(S_0) for every vertex: a_u + incident suspiciousness."""
+        cm = jnp.where(self.edge_mask, self.c, 0.0)
+        w = jnp.where(self.vertex_mask, self.a, 0.0)
+        w = w + jax.ops.segment_sum(cm, self.src, num_segments=self.n_capacity)
+        w = w + jax.ops.segment_sum(cm, self.dst, num_segments=self.n_capacity)
+        return w
+
+
+def device_graph_from_coo(
+    n: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    c: np.ndarray | None = None,
+    a: np.ndarray | None = None,
+    n_capacity: int | None = None,
+    e_capacity: int | None = None,
+) -> DeviceGraph:
+    """Build a DeviceGraph from host COO arrays (padding to capacity)."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    m = src.shape[0]
+    c = np.ones(m, dtype=np.float32) if c is None else np.asarray(c, dtype=np.float32)
+    n_cap = int(n_capacity or n)
+    e_cap = int(e_capacity or max(m, 1))
+    if n_cap < n or e_cap < m:
+        raise ValueError("capacity smaller than graph")
+    pad_e = e_cap - m
+    pad_idx = np.full(pad_e, n_cap - 1, dtype=np.int32)
+    av = np.zeros(n_cap, dtype=np.float32)
+    if a is not None:
+        av[:n] = np.asarray(a, dtype=np.float32)
+    return DeviceGraph(
+        src=jnp.asarray(np.concatenate([src, pad_idx])),
+        dst=jnp.asarray(np.concatenate([dst, pad_idx])),
+        c=jnp.asarray(np.concatenate([c, np.zeros(pad_e, np.float32)])),
+        edge_mask=jnp.asarray(
+            np.concatenate([np.ones(m, bool), np.zeros(pad_e, bool)])
+        ),
+        a=jnp.asarray(av),
+        vertex_mask=jnp.asarray(np.arange(n_cap) < n),
+        n_capacity=n_cap,
+        e_capacity=e_cap,
+    )
+
+
+def append_edges(
+    g: DeviceGraph,
+    offset: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array | None = None,
+) -> DeviceGraph:
+    """Write a batch of edges into slots [offset, offset+B) (device-side).
+
+    ``offset`` is the current edge count (host-tracked or device scalar);
+    batch size B is static.  Out-of-capacity writes are dropped (callers
+    reallocate on host when the high-water mark approaches capacity).
+    """
+    B = src.shape[0]
+    idx = offset + jnp.arange(B, dtype=jnp.int32)
+    ok = idx < g.e_capacity
+    if valid is not None:
+        ok = ok & valid
+    # dropped writes go out of bounds and are discarded by mode='drop'
+    idx = jnp.where(ok, idx, g.e_capacity)
+    return dataclasses.replace(
+        g,
+        src=g.src.at[idx].set(src.astype(jnp.int32), mode="drop"),
+        dst=g.dst.at[idx].set(dst.astype(jnp.int32), mode="drop"),
+        c=g.c.at[idx].set(c.astype(jnp.float32), mode="drop"),
+        edge_mask=g.edge_mask.at[idx].set(True, mode="drop"),
+    )
+
+
+def csr_sort(g: DeviceGraph) -> DeviceGraph:
+    """Sort edge slots by (src, dst) for locality (host-side utility)."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    order = np.lexsort((dst, src))
+    return dataclasses.replace(
+        g,
+        src=jnp.asarray(src[order]),
+        dst=jnp.asarray(dst[order]),
+        c=jnp.asarray(np.asarray(g.c)[order]),
+        edge_mask=jnp.asarray(np.asarray(g.edge_mask)[order]),
+    )

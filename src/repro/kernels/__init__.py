@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with an
+``ops.py`` jit wrapper and a ``ref.py`` pure-jnp oracle:
+
+* ``flash_attention`` — blocked online-softmax GQA attention (LM hot path)
+* ``gather_segsum``   — block-sparse SpMM via scalar-prefetch block gather
+                        (GNN message passing / embedding bag / peel SpMV)
+* ``peel_round``      — fused elementwise half of a bulk-peeling round
+                        (the paper's maintenance hot path)
+
+This container is CPU-only: kernels target TPU (pl.pallas_call + BlockSpec
+VMEM tiling) and are validated in interpret mode; ops.py wrappers fall
+back to references off-TPU.
+"""

@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the Pallas flash-attention kernel.
+
+On TPU runtimes the Pallas path is used; elsewhere (this CPU container)
+``interpret=True`` executes the kernel body in Python for validation, and
+production CPU falls back to the reference.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "force"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=256, block_k=256,
+                    force: str | None = None):
+    """force: None (auto), 'pallas', 'interpret', 'ref'."""
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode == "pallas":
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k)
+    if mode == "interpret":
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k, interpret=True)
+    return attention_ref(q, k, v, causal=causal, window=window)

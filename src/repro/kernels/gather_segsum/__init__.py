@@ -1,0 +1,4 @@
+from .ops import BlockTiles, build_tiles, gather_segsum
+from .ref import spmm_ref
+
+__all__ = ["BlockTiles", "build_tiles", "gather_segsum", "spmm_ref"]

@@ -1,0 +1,81 @@
+"""Preprocessing + jit'd wrapper for the block-sparse SpMM kernel.
+
+``build_tiles`` buckets COO edges into dense 128x128 tiles (host-side, part
+of the data pipeline — graphs are tiled once and updated incrementally);
+``gather_segsum`` runs the Pallas kernel (TPU) / interpret (validation) /
+segment-sum reference (CPU production).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import block_spmm
+from .ref import spmm_ref
+
+
+@dataclass
+class BlockTiles:
+    tiles: np.ndarray  # [T, bs, bs] f32
+    tile_src: np.ndarray  # [T] i32
+    tile_dst: np.ndarray  # [T] i32 (sorted)
+    first_visit: np.ndarray  # [T] i32
+    n_out_blocks: int
+    n_src_blocks: int
+    block_size: int
+    occupancy: float  # nnz / (T * bs * bs) — tile density diagnostic
+
+
+def build_tiles(src, dst, val, n_dst, n_src, block_size: int = 128) -> BlockTiles:
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    val = (np.ones(src.shape[0], np.float32) if val is None
+           else np.asarray(val, np.float32))
+    bs = block_size
+    n_db = -(-n_dst // bs)
+    n_sb = -(-n_src // bs)
+    db, sb = dst // bs, src // bs
+    key = db * n_sb + sb
+    order = np.argsort(key, kind="stable")
+    src, dst, val, key, db, sb = (a[order] for a in (src, dst, val, key, db, sb))
+    uniq, start = np.unique(key, return_index=True)
+    # ensure every dst block appears (zero tile) so init fires
+    present = np.unique(uniq // n_sb)
+    missing = np.setdiff1d(np.arange(n_db), present)
+    T = uniq.shape[0] + missing.shape[0]
+    tiles = np.zeros((T, bs, bs), np.float32)
+    t_src = np.zeros(T, np.int32)
+    t_dst = np.zeros(T, np.int32)
+    ends = np.append(start[1:], key.shape[0])
+    for i, (k, s, e) in enumerate(zip(uniq, start, ends)):
+        t_dst[i] = k // n_sb
+        t_src[i] = k % n_sb
+        np.add.at(tiles[i], (dst[s:e] % bs, src[s:e] % bs), val[s:e])
+    for j, mb in enumerate(missing):
+        t_dst[uniq.shape[0] + j] = mb
+        t_src[uniq.shape[0] + j] = 0
+    reorder = np.argsort(t_dst, kind="stable")
+    tiles, t_src, t_dst = tiles[reorder], t_src[reorder], t_dst[reorder]
+    first = np.zeros(T, np.int32)
+    first[0] = 1
+    first[1:] = (t_dst[1:] != t_dst[:-1]).astype(np.int32)
+    occ = float(val.shape[0]) / float(T * bs * bs)
+    return BlockTiles(tiles, t_src, t_dst, first, n_db, n_sb, bs, occ)
+
+
+def gather_segsum(bt: BlockTiles, x: jax.Array, n_out: int, *,
+                  force: str | None = None) -> jax.Array:
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "interpret")
+    out = block_spmm(
+        jnp.asarray(bt.tiles), jnp.asarray(bt.tile_src), jnp.asarray(bt.tile_dst),
+        jnp.asarray(bt.first_visit),
+        jnp.pad(x, ((0, bt.n_src_blocks * bt.block_size - x.shape[0]), (0, 0))),
+        bt.n_out_blocks,
+        interpret=(mode == "interpret"),
+    )
+    return out[:n_out]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: COO gather + segment-sum (identical contract to
+repro.graphstore.segment_ops.gather_scatter_sum)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_ref(src, dst, val, x, n_out):
+    """out[d] = sum_{e: dst_e = d} val_e * x[src_e].  x: [N, F]."""
+    msgs = x[src] * val[:, None]
+    return jax.ops.segment_sum(msgs, dst, num_segments=n_out)

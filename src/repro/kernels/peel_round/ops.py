@@ -1,0 +1,24 @@
+"""Jit'd wrapper for the fused peel-round kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import peel_round_update
+from .ref import peel_round_ref
+
+
+@partial(jax.jit, static_argnames=("force",))
+def peel_round(w, a, active, level, dw, thresh, round_, force: str | None = None):
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if mode == "ref":
+        return peel_round_ref(w, a, active, level, dw, thresh, round_)
+    out = peel_round_update(
+        w, a, active, level, dw, jnp.asarray(thresh), jnp.asarray(round_),
+        interpret=(mode == "interpret"),
+    )
+    w2, active2, level2, peeled, partials = out
+    return w2, active2, level2, peeled, partials.sum(axis=0)

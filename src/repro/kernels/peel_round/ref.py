@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused peel-round update."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def peel_round_ref(w, a, active, level, dw, thresh, round_):
+    peeled = active & (w <= thresh)
+    w2 = w - dw
+    active2 = active & ~peeled
+    level2 = jnp.where(peeled, round_, level)
+    pf = peeled.astype(jnp.float32)
+    partials = jnp.stack([
+        jnp.sum(pf * a), jnp.sum(pf * w), jnp.sum(pf)
+    ])
+    return w2, active2, level2, peeled, partials

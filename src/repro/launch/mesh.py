@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis carries
+pure data parallelism (params replicated across pods, FSDP within a pod)
+so the slow inter-pod (DCN) hop only sees gradient all-reduces.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever fits the current host (smoke tests, examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

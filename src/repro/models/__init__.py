@@ -1,0 +1,12 @@
+from .attention import decode_attention, dense_attention, flash_attention
+from .gnn import GraphBatch, gnn_forward, gnn_loss, init_gnn_params, make_triplets
+from .transformer import (KVCache, cache_window, decode_step, forward, init_lm_params,
+                          lm_loss, prefill)
+from .two_tower import (RecsysBatch, init_two_tower_params, item_tower, retrieval_scores,
+                        score_pairs, two_tower_loss, user_tower)
+
+__all__ = ["flash_attention", "dense_attention", "decode_attention", "GraphBatch",
+           "gnn_forward", "gnn_loss", "init_gnn_params", "make_triplets", "KVCache",
+           "cache_window", "decode_step", "forward", "init_lm_params", "lm_loss",
+           "prefill", "RecsysBatch", "init_two_tower_params", "user_tower", "item_tower",
+           "two_tower_loss", "score_pairs", "retrieval_scores"]

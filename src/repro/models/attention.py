@@ -1,0 +1,161 @@
+"""Attention: blocked flash-style (pure jnp, online softmax) + KV-cache
+decode.  GQA-grouped, causal and sliding-window masks.
+
+The blocked implementation is the roofline-measured path (the Pallas kernel
+in ``repro.kernels.flash_attention`` is the TPU hot path with the same
+contract, selected on real hardware).  Memory per step is
+O(B * Bq * Hq * Bk) — no S x S score materialization, which is what lets
+``prefill_32k`` fit the 16 GB/chip v5e budget.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import maybe_scan
+
+__all__ = ["flash_attention", "decode_attention", "dense_attention"]
+
+_NEG = -1e30
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None, kv_len=None):
+    """[Bq, Bk] additive bias."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        ok &= k_pos[None, :] < kv_len
+    return jnp.where(ok, 0.0, _NEG).astype(jnp.float32)
+
+
+def dense_attention(q, k, v, *, causal=True, window=None):
+    """Reference O(S^2)-memory attention (smoke scale / kernel oracle).
+
+    q: [B, Sq, Hkv, G, D]; k, v: [B, Skv, Hkv, D]. Returns [B, Sq, Hkv, G, D].
+    """
+    B, Sq, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    q_pos = jnp.arange(Sq) + (Skv - Sq)  # right-aligned queries
+    bias = _mask_bias(q_pos, jnp.arange(Skv), causal, window)
+    s = s + bias[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_block", "kv_block", "unroll"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    unroll: bool = False,
+):
+    """Blocked online-softmax attention.
+
+    q: [B, S, Hkv, G, D] (GQA groups folded in), k/v: [B, S, Hkv, D].
+    Scans q blocks (outer) and kv blocks (inner); every (qb, kb) tile is
+    computed with masking (baseline; causal tile-skipping is a recorded
+    §Perf optimization).
+    """
+    B, S, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    Bq = min(q_block, S)
+    Bk = min(kv_block, Skv)
+    nQ, nK = -(-S // Bq), -(-Skv // Bk)
+    pad_q, pad_k = nQ * Bq - S, nK * Bk - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    qb = q.reshape(B, nQ, Bq, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nK, Bk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nK, Bk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        q_pos = iq * Bq + jnp.arange(Bq)
+
+        def kv_step(carry, kv_and_idx):
+            m, l, acc = carry
+            ki, vi, ik = kv_and_idx
+            k_pos = ik * Bk + jnp.arange(Bk)
+            s = (
+                jnp.einsum(
+                    "bqhgd,bkhd->bqhgk", qi.astype(jnp.float32), ki.astype(jnp.float32)
+                )
+                * scale
+            )
+            bias = _mask_bias(q_pos, k_pos, causal, window, kv_len=Skv)
+            s = s + bias[None, :, None, None, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, vi.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Bq, Hkv, G), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Bq, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, Bq, Hkv, G, D), jnp.float32)
+        (m, l, acc), _ = maybe_scan(
+            kv_step, (m0, l0, a0), (kb, vb, jnp.arange(nK)), unroll=unroll
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = maybe_scan(q_step, None, (qb, jnp.arange(nQ)), unroll=unroll)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nQ * Bq, Hkv, G, D)
+    return out[:, :S]
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+    rolling: bool = False,
+):
+    """One-token attention over a KV cache.
+
+    q: [B, Hkv, G, D]; caches: [B, W, Hkv, D]; pos: [B] absolute position of
+    the query token.  ``rolling`` caches store position t at slot t % W
+    (sliding-window serving — the ``long_500k`` path).
+    """
+    B, W, Hkv, D = k_cache.shape
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    slots = jnp.arange(W)
+    if rolling:
+        # absolute position held by each slot given current pos p
+        abs_pos = pos[:, None] - ((pos[:, None] - slots[None, :]) % W)
+    else:
+        abs_pos = jnp.broadcast_to(slots[None, :], (B, W))
+    ok = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+    if window is not None:
+        ok &= abs_pos > pos[:, None] - window
+    s = (
+        jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32), k_cache.astype(jnp.float32))
+        * scale
+    )
+    s = s + jnp.where(ok, 0.0, _NEG)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32)).astype(q.dtype)

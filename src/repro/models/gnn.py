@@ -1,0 +1,324 @@
+"""GNN zoo: GCN, GAT, MeshGraphNet, DimeNet — all built on the segment-op
+substrate (JAX has no sparse SpMM; message passing is gather -> segment
+reduce, the contract shared with the Pallas ``gather_segsum`` kernel).
+
+Fixed-shape contract: every graph batch is a :class:`GraphBatch` with
+static array sizes (padded); batched small graphs (``molecule``) are the
+same code path via block-diagonal edge indices.  DimeNet additionally takes
+host-precomputed triplet indices (k->j, j->i) with a per-edge cap
+(GemNet-style subsampling — unbounded triplets are Θ(Σ deg²); see
+DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.dist.sharding import constrain
+from repro.graphstore.segment_ops import (
+    gather_scatter_sum,
+    segment_mean,
+    segment_softmax,
+    segment_sum,
+)
+from repro.models.layers import Initializer, maybe_scan
+
+__all__ = ["GraphBatch", "init_gnn_params", "gnn_forward", "gnn_loss", "make_triplets"]
+
+
+class GraphBatch(NamedTuple):
+    """Static-shape graph inputs.
+
+    ``edge_src/edge_dst`` index ``node_feat``; padding edges point at node
+    ``N-1`` with ``edge_mask = False``.  DimeNet fields may be zero-sized
+    for other models.
+    """
+
+    node_feat: jax.Array  # [N, F] f32
+    edge_src: jax.Array  # [E] i32
+    edge_dst: jax.Array  # [E] i32
+    edge_mask: jax.Array  # [E] bool
+    node_mask: jax.Array  # [N] bool
+    edge_feat: jax.Array  # [E, Fe] f32 (meshgraphnet; else [E, 0])
+    labels: jax.Array  # [N] i32 node labels (or graph labels via seg ids)
+    # dimenet triplets: edge k->j feeds edge j->i with interior angle
+    tri_in: jax.Array  # [T] i32 edge id (k->j)
+    tri_out: jax.Array  # [T] i32 edge id (j->i)
+    tri_angle: jax.Array  # [T] f32 angle
+    tri_mask: jax.Array  # [T] bool
+    edge_len: jax.Array  # [E] f32 distances (dimenet)
+
+
+def _mlp_params(init: Initializer, dims: list[int], dt) -> dict:
+    return {
+        f"w{i}": init((a, b), fan_in=a, dtype=dt)
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:]))
+    } | {f"b{i}": jnp.zeros((b,), dt) for i, b in enumerate(dims[1:])}
+
+
+def _mlp(p: dict, x: jax.Array, n: int, act=jax.nn.relu, final_act=False) -> jax.Array:
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_gnn_params(key: jax.Array, cfg: GNNConfig, d_feat: int, d_edge_feat: int = 4) -> dict:
+    init = Initializer(key)
+    dt = jnp.dtype(cfg.dtype)
+    H = cfg.d_hidden
+    if cfg.kind == "gcn":
+        dims = [d_feat] + [H] * (cfg.n_layers - 1) + [cfg.n_classes]
+        return {
+            "w": [init((a, b), fan_in=a, dtype=dt) for a, b in zip(dims[:-1], dims[1:])],
+            "b": [jnp.zeros((b,), dt) for b in dims[1:]],
+        }
+    if cfg.kind == "gat":
+        heads = cfg.n_heads
+        p = {"layers": []}
+        d_in = d_feat
+        for li in range(cfg.n_layers):
+            last = li == cfg.n_layers - 1
+            d_out = cfg.n_classes if last else H
+            p["layers"].append(
+                {
+                    "w": init((d_in, heads * d_out), fan_in=d_in, dtype=dt),
+                    "a_src": init((heads, d_out), fan_in=d_out, dtype=dt),
+                    "a_dst": init((heads, d_out), fan_in=d_out, dtype=dt),
+                }
+            )
+            d_in = d_out if last else heads * d_out
+        return p
+    if cfg.kind == "meshgraphnet":
+        L, n_mlp = cfg.n_layers, cfg.mlp_layers
+        enc_node = _mlp_params(init, [d_feat] + [H] * n_mlp, dt)
+        enc_edge = _mlp_params(init, [d_edge_feat] + [H] * n_mlp, dt)
+        # stacked processor blocks (leading dim L) for lax.scan
+        def stack(dims):
+            ps = [_mlp_params(Initializer(jax.random.fold_in(key, 100 + i)), dims, dt) for i in range(L)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+        proc_edge = stack([3 * H] + [H] * n_mlp)
+        proc_node = stack([2 * H] + [H] * n_mlp)
+        dec = _mlp_params(init, [H] * n_mlp + [cfg.n_classes], dt)
+        return {
+            "enc_node": enc_node,
+            "enc_edge": enc_edge,
+            "proc_edge": proc_edge,
+            "proc_node": proc_node,
+            "dec": dec,
+        }
+    if cfg.kind == "dimenet":
+        B, H_ = cfg.n_layers, H  # n_layers carries n_blocks for dimenet
+        nr, ns, nb = cfg.n_radial, cfg.n_spherical, cfg.n_bilinear
+        def stack(maker):
+            ps = [maker(Initializer(jax.random.fold_in(key, 200 + i))) for i in range(B)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+        return {
+            "embed_node": init((d_feat, H_), fan_in=d_feat, dtype=dt),
+            "embed_rbf": init((nr, H_), fan_in=nr, dtype=dt),
+            "blocks": stack(
+                lambda it: {
+                    "w_sbf": it((ns * nr, nb), fan_in=ns * nr, dtype=dt),
+                    "w_bil": it((nb, H_, H_), fan_in=H_, dtype=dt),
+                    "w_msg": it((H_, H_), fan_in=H_, dtype=dt),
+                    "w_rbf": it((nr, H_), fan_in=nr, dtype=dt),
+                    "w_out1": it((H_, H_), fan_in=H_, dtype=dt),
+                    "w_out2": it((H_, H_), fan_in=H_, dtype=dt),
+                }
+            ),
+            "out": _mlp_params(init, [H_, H_, cfg.n_classes], dt),
+        }
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _gcn_forward(p, g: GraphBatch, cfg: GNNConfig):
+    N = g.node_feat.shape[0]
+    ones = jnp.where(g.edge_mask, 1.0, 0.0)
+    deg = segment_sum(ones, g.edge_dst, N) + segment_sum(ones, g.edge_src, N) + 1.0
+    inv_sqrt = jax.lax.rsqrt(deg)
+    x = g.node_feat
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        h = x @ w + b
+        # symmetric-normalized aggregation over both directions + self loop
+        ew = jnp.where(g.edge_mask, inv_sqrt[g.edge_src] * inv_sqrt[g.edge_dst], 0.0)
+        agg = gather_scatter_sum(h, g.edge_src, g.edge_dst, N, edge_weight=ew)
+        agg = agg + gather_scatter_sum(h, g.edge_dst, g.edge_src, N, edge_weight=ew)
+        x = agg + h * (inv_sqrt * inv_sqrt)[:, None]
+        if cfg.aggregator == "mean":
+            pass  # sym-norm already averages
+        if i < len(p["w"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _gat_forward(p, g: GraphBatch, cfg: GNNConfig):
+    N = g.node_feat.shape[0]
+    x = g.node_feat
+    E = g.edge_src.shape[0]
+    for li, lp in enumerate(p["layers"]):
+        last = li == len(p["layers"]) - 1
+        heads = cfg.n_heads
+        d_out = lp["a_src"].shape[1]
+        h = (x @ lp["w"]).reshape(N, heads, d_out)
+        es = jnp.einsum("nhd,hd->nh", h, lp["a_src"])
+        ed = jnp.einsum("nhd,hd->nh", h, lp["a_dst"])
+        logits = jax.nn.leaky_relu(es[g.edge_src] + ed[g.edge_dst], 0.2)  # [E, H]
+        logits = jnp.where(g.edge_mask[:, None], logits, -1e30)
+        alpha = segment_softmax(logits, g.edge_dst, N)  # [E, H]
+        msgs = h[g.edge_src] * alpha[..., None]  # [E, H, D]
+        agg = segment_sum(
+            jnp.where(g.edge_mask[:, None, None], msgs, 0.0), g.edge_dst, N
+        )
+        x = agg.mean(axis=1) if last else jax.nn.elu(agg.reshape(N, heads * d_out))
+    return x
+
+
+def _layer_norm(x, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def _mgn_forward(p, g: GraphBatch, cfg: GNNConfig):
+    N = g.node_feat.shape[0]
+    n = cfg.mlp_layers
+    # MGN convention: every MLP (except the decoder) is LayerNorm'd
+    h = _layer_norm(_mlp(p["enc_node"], g.node_feat, n, final_act=True))
+    e = _layer_norm(_mlp(p["enc_edge"], g.edge_feat, n, final_act=True))
+    em = g.edge_mask[:, None]
+
+    def step(carry, lp):
+        h, e = carry
+        pe, pn = lp
+        e_in = jnp.concatenate([e, h[g.edge_src], h[g.edge_dst]], axis=-1)
+        e = e + jnp.where(em, _layer_norm(_mlp(pe, e_in, n)), 0.0)
+        e = constrain(e, "edges", None)
+        agg = segment_sum(jnp.where(em, e, 0.0), g.edge_dst, N)
+        if cfg.aggregator == "mean":
+            agg = segment_mean(jnp.where(em, e, 0.0), g.edge_dst, N)
+        h = h + _layer_norm(_mlp(pn, jnp.concatenate([h, agg], axis=-1), n))
+        h = constrain(h, "vertex", None)
+        return (h, e), None
+
+    # remat: store only the (h, e) carries across the 15 processor steps;
+    # the step MLP intermediates ([E, 3H] concats etc.) are recomputed in
+    # the backward pass — without this, ogb_products stores ~95 GB/step
+    # (bf16 carries were tried and refuted: no temp change under the CPU
+    # buffer model; kept f32 for clean numerics)
+    (h, _e), _ = maybe_scan(jax.checkpoint(step), (h, e),
+                            (p["proc_edge"], p["proc_node"]), unroll=cfg.unroll)
+    return _mlp(p["dec"], h, n)
+
+
+def _radial_basis(d, n_radial, cutoff=5.0):
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    d = jnp.maximum(d, 1e-6)[:, None]
+    return jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * d / cutoff) / d
+
+
+def _spherical_basis(angle, d, n_spherical, n_radial, cutoff=5.0):
+    # separable Fourier-Bessel-flavoured basis: cos(l*theta) * sin(n*pi*d/c)/d
+    l = jnp.arange(n_spherical, dtype=jnp.float32)
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    ang = jnp.cos(l[None, :] * angle[:, None])  # [T, S]
+    dd = jnp.maximum(d, 1e-6)[:, None]
+    rad = jnp.sin(n * jnp.pi * dd / cutoff) / dd  # [T, R]
+    return (ang[:, :, None] * rad[:, None, :]).reshape(angle.shape[0], -1)  # [T, S*R]
+
+
+def _dimenet_forward(p, g: GraphBatch, cfg: GNNConfig):
+    N, E = g.node_feat.shape[0], g.edge_src.shape[0]
+    H = cfg.d_hidden
+    rbf = _radial_basis(g.edge_len, cfg.n_radial)  # [E, R]
+    x = g.node_feat @ p["embed_node"]  # [N, H]
+    m = jax.nn.silu(x[g.edge_src] + x[g.edge_dst] + rbf @ p["embed_rbf"])  # [E, H]
+    sbf = _spherical_basis(g.tri_angle, g.edge_len[g.tri_out], cfg.n_spherical, cfg.n_radial)
+
+    def block(m, bp):
+        # directional message passing over triplets k->j->i
+        m_kj = m[g.tri_in] @ bp["w_msg"]  # [T, H]
+        basis = sbf @ bp["w_sbf"]  # [T, B]
+        inter = jnp.einsum("tb,bhf,th->tf", basis, bp["w_bil"], m_kj)  # [T, H]
+        inter = jnp.where(g.tri_mask[:, None], inter, 0.0)
+        agg = segment_sum(inter, g.tri_out, E)  # [E, H]
+        m = jax.nn.silu(m + agg + rbf @ bp["w_rbf"])
+        out = jax.nn.silu(m @ bp["w_out1"]) @ bp["w_out2"]
+        return m, out
+
+    m, outs = maybe_scan(jax.checkpoint(block), m, p["blocks"], unroll=cfg.unroll)
+    per_edge = outs.sum(0)  # [E, H]
+    per_node = segment_sum(
+        jnp.where(g.edge_mask[:, None], per_edge, 0.0), g.edge_dst, N
+    )
+    return _mlp(p["out"], per_node, 2)
+
+
+def gnn_forward(p: dict, g: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    fn = {
+        "gcn": _gcn_forward,
+        "gat": _gat_forward,
+        "meshgraphnet": _mgn_forward,
+        "dimenet": _dimenet_forward,
+    }[cfg.kind]
+    out = fn(p, g, cfg)
+    return constrain(out, "vertex", None)
+
+
+def gnn_loss(p: dict, g: GraphBatch, cfg: GNNConfig):
+    logits = gnn_forward(p, g, cfg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, g.labels[:, None], axis=-1)[:, 0]
+    nll = jnp.where(g.node_mask, lse - ll, 0.0)
+    return nll.sum() / jnp.maximum(g.node_mask.sum(), 1), {}
+
+
+# ---------------------------------------------------------------------------
+# host-side triplet construction (dimenet data pipeline)
+# ---------------------------------------------------------------------------
+
+
+def make_triplets(
+    src: np.ndarray, dst: np.ndarray, cap_per_edge: int, rng: np.random.Generator
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """For each edge (j->i), sample up to ``cap_per_edge`` incoming edges
+    (k->j); returns (tri_in, tri_out, mask) of static size E * cap."""
+    E = src.shape[0]
+    order = np.argsort(dst, kind="stable")
+    indptr = np.zeros(int(max(dst.max(initial=0), src.max(initial=0)) + 2), np.int64)
+    np.add.at(indptr, dst + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    tri_in = np.zeros(E * cap_per_edge, np.int32)
+    tri_out = np.zeros(E * cap_per_edge, np.int32)
+    mask = np.zeros(E * cap_per_edge, bool)
+    for e in range(E):
+        j = src[e]
+        lo, hi = indptr[j], indptr[j + 1]
+        incoming = order[lo:hi]
+        incoming = incoming[incoming != e]
+        if incoming.shape[0] == 0:
+            continue
+        take = min(cap_per_edge, incoming.shape[0])
+        sel = rng.choice(incoming, size=take, replace=False)
+        s = e * cap_per_edge
+        tri_in[s : s + take] = sel
+        tri_out[s : s + take] = e
+        mask[s : s + take] = True
+    return tri_in, tri_out, mask

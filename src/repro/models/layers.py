@@ -1,0 +1,82 @@
+"""Shared neural building blocks (pure-jnp, scan-friendly)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope_angles", "apply_rope", "swiglu", "dense_init", "Initializer",
+           "maybe_scan"]
+
+
+def maybe_scan(f, init, xs, unroll: bool = False):
+    """lax.scan, or a python unroll producing straight-line HLO.
+
+    The unrolled form exists for the roofline lowering: XLA's
+    ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+    count, so scanned programs under-report FLOPs/bytes by the trip count.
+    Unrolled lowerings pay that cost in HLO size instead (coarse attention
+    blocks keep it bounded) and are never executed — only analysed.
+    """
+    if not unroll:
+        return jax.lax.scan(f, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = f(carry, jax.tree.map(lambda x: x[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_angles(positions: jax.Array, d_head: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given absolute positions; shapes [..., d_head/2]."""
+    half = d_head // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (split-half convention). x: [..., S, H, D]; cos/sin
+    broadcastable [..., S, 1, D/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+class Initializer:
+    """Deterministic fan-in-scaled normal init, one fold per param path."""
+
+    def __init__(self, key: jax.Array):
+        self.key = key
+        self._i = 0
+
+    def __call__(self, shape, fan_in: int | None = None, dtype=jnp.float32):
+        self._i += 1
+        k = jax.random.fold_in(self.key, self._i)
+        fi = fan_in if fan_in is not None else (shape[-2] if len(shape) >= 2 else shape[-1])
+        return (jax.random.normal(k, shape, dtype=jnp.float32) / jnp.sqrt(fi)).astype(dtype)
+
+
+def dense_init(init: Initializer, d_in: int, d_out: int, n_layers: int | None = None, dtype=jnp.float32):
+    shape = (n_layers, d_in, d_out) if n_layers else (d_in, d_out)
+    return init(shape, fan_in=d_in, dtype=dtype)

@@ -1,0 +1,257 @@
+"""Decoder-only transformer LM covering all five assigned LM architectures
+(GQA, optional sliding-window attention, optional qk-norm, dense-SwiGLU or
+MoE FFN), with scan-over-layers (small HLO, fast multi-pod compiles) and
+three entry points:
+
+* ``forward``      — training/scoring forward (causal)
+* ``prefill``      — forward + KV-cache construction
+* ``decode_step``  — one token with a (optionally rolling) KV cache
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.dist.sharding import constrain
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.layers import (Initializer, apply_rope, maybe_scan, rms_norm,
+                                 rope_angles, swiglu)
+from repro.models.moe import moe_ffn
+
+__all__ = ["init_lm_params", "forward", "prefill", "decode_step", "lm_loss", "KVCache", "cache_window"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [L, B, W, Hkv, Dh]
+    v: jax.Array  # [L, B, W, Hkv, Dh]
+
+
+def cache_window(cfg: LMConfig, seq_len: int) -> tuple[int, bool]:
+    """(cache width W, rolling?) — SWA models cap the cache at the window."""
+    if cfg.sliding_window is not None and cfg.sliding_window < seq_len:
+        return cfg.sliding_window, True
+    return seq_len, False
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_lm_params(key: jax.Array, cfg: LMConfig) -> dict:
+    init = Initializer(key)
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = _dtype(cfg)
+    layers: dict = {
+        "attn_norm": jnp.ones((L, D), dt),
+        "mlp_norm": jnp.ones((L, D), dt),
+        "wq": init((L, D, Hq * Dh), fan_in=D, dtype=dt),
+        "wk": init((L, D, Hkv * Dh), fan_in=D, dtype=dt),
+        "wv": init((L, D, Hkv * Dh), fan_in=D, dtype=dt),
+        "wo": init((L, Hq * Dh, D), fan_in=Hq * Dh, dtype=dt),
+    }
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.ones((L, Dh), dt)
+        layers["k_norm"] = jnp.ones((L, Dh), dt)
+    if cfg.moe:
+        E, F = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        vs = cfg.moe.virtual_split
+        Ev, Fv = E * vs, F // vs
+        layers["moe"] = {
+            "router": init((L, D, E), fan_in=D, dtype=jnp.float32),
+            "w_gate": init((L, Ev, D, Fv), fan_in=D, dtype=dt),
+            "w_up": init((L, Ev, D, Fv), fan_in=D, dtype=dt),
+            "w_down": init((L, Ev, Fv, D), fan_in=F, dtype=dt),
+        }
+    else:
+        F = cfg.d_ff
+        layers["mlp"] = {
+            "w_gate": init((L, D, F), fan_in=D, dtype=dt),
+            "w_up": init((L, D, F), fan_in=D, dtype=dt),
+            "w_down": init((L, F, D), fan_in=F, dtype=dt),
+        }
+    return {
+        "embed": init((V, D), fan_in=D, dtype=dt),
+        "layers": layers,
+        "final_norm": jnp.ones((D,), dt),
+        "head": init((D, V), fan_in=D, dtype=dt),
+    }
+
+
+def _attn_block(x, lp, cfg: LMConfig, cos, sin, mode, kc=None, vc=None, pos=None):
+    """Shared attention block. Training/prefill: x [B,S,D]; decode: x [B,D]."""
+    B = x.shape[0]
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = Hq // Hkv
+    h = rms_norm(x, lp["attn_norm"])
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if mode == "decode":
+        q = q.reshape(B, Hkv, G, Dh)
+        k = k.reshape(B, Hkv, Dh)
+        v = v.reshape(B, Hkv, Dh)
+    else:
+        S = x.shape[1]
+        q = q.reshape(B, S, Hkv, G, Dh)
+        k = k.reshape(B, S, Hkv, Dh)
+        v = v.reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    if mode == "decode":
+        q = apply_rope(q, cos[:, None, None, :], sin[:, None, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        W = kc.shape[1]
+        slots = pos % W
+        kc = kc.at[jnp.arange(B), slots].set(k)
+        vc = vc.at[jnp.arange(B), slots].set(v)
+        # the slot invariant (position t lives at slot t % W) makes
+        # rolling=True exact for full caches too (W == S_max)
+        o = decode_attention(q, kc, vc, pos, window=cfg.sliding_window, rolling=True)
+        o = o.reshape(B, Hq * Dh)
+        return x + o @ lp["wo"], (kc, vc)
+    else:
+        q = apply_rope(q, cos[None, :, None, None, :], sin[None, :, None, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        if mode == "prefill" and cfg.n_heads % 16 != 0:
+            # sequence-sharded serving attention (see dist.sharding 'seq'):
+            # measured WIN only when q-heads don't divide the model axis
+            # (deepseek 56, qwen3 40: collectives 5-6x down); head-divisible
+            # archs (mixtral 32, internlm2 48, olmoe 16) regressed under it
+            # and keep the head-sharded path (§Perf cell 5)
+            q = constrain(q, "batch", "seq", None, None, None)
+            k = constrain(k, "batch", "seq", None, None)
+            v = constrain(v, "batch", "seq", None, None)
+        o = flash_attention(
+            q,
+            k,
+            v,
+            causal=True,
+            window=cfg.sliding_window,
+            q_block=cfg.q_block,
+            kv_block=cfg.kv_block,
+            unroll=cfg.unroll,
+        )
+        o = o.reshape(B, S, Hq * Dh)
+    return x + o @ lp["wo"], (k, v)
+
+
+def _ffn_block(x, lp, cfg: LMConfig):
+    h = rms_norm(x, lp["mlp_norm"])
+    if cfg.moe:
+        shape = h.shape
+        flat = h.reshape(-1, cfg.d_model)
+        y, aux = moe_ffn(flat, lp["moe"], cfg.moe)
+        return x + y.reshape(shape), aux
+    y = swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    return x + y, jnp.float32(0.0)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig, remat: bool = True):
+    """tokens [B, S] -> (logits [B, S, V] f32, aux loss)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", None, None)
+    cos, sin = rope_angles(jnp.arange(S), cfg.d_head, cfg.rope_theta)
+
+    def layer(carry, lp):
+        x, aux = carry
+        x, _ = _attn_block(x, lp, cfg, cos, sin, mode="train")
+        x = constrain(x, "batch", None, None)
+        x, a = _ffn_block(x, lp, cfg)
+        x = constrain(x, "batch", None, None)
+        return (x, aux + a), None
+
+    # (§Perf note: selective remat — dots_with_no_batch_dims_saveable — was
+    # tried and REFUTED: -7%% on the memory term but +4.6 GB/device resident
+    # (9.9 -> 14.5 GB), breaking the 16 GB v5e fit. Full remat stays.)
+    f = jax.checkpoint(layer) if remat else layer
+    (x, aux), _ = maybe_scan(f, (x, jnp.float32(0.0)), params["layers"], unroll=cfg.unroll)
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "model")
+    return logits, aux / cfg.n_layers
+
+
+def lm_loss(params: dict, tokens: jax.Array, labels: jax.Array, cfg: LMConfig,
+            aux_weight: float = 0.01):
+    # (§Perf note: a sequence-chunked head/loss — never materializing the
+    # [B*S, V] f32 logits — was tried and REFUTED: +10% on the memory term
+    # from the per-chunk head-matmul recompute, with resident memory already
+    # within budget. The straightforward form stays.)
+    logits, aux = forward(params, tokens, cfg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll).mean()
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: LMConfig):
+    """tokens [B, S] -> (logits of last position [B, V], KVCache)."""
+    B, S = tokens.shape
+    W, rolling = cache_window(cfg, S)
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", None, None)
+    cos, sin = rope_angles(jnp.arange(S), cfg.d_head, cfg.rope_theta)
+
+    def layer(carry, lp):
+        x = carry
+        x, (k, v) = _attn_block(x, lp, cfg, cos, sin, mode="prefill")
+        x, _ = _ffn_block(x, lp, cfg)
+        x = constrain(x, "batch", None, None)
+        # roll the last W positions into cache slots t % W
+        kw, vw = k[:, -W:], v[:, -W:]
+        pos_w = jnp.arange(S - W, S)
+        slots = pos_w % W
+        kc = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(kw)
+        vc = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(vw)
+        return x, (kc, vc)
+
+    x, (kcs, vcs) = maybe_scan(jax.checkpoint(layer), x, params["layers"], unroll=cfg.unroll)
+    x = rms_norm(x[:, -1], params["final_norm"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits, KVCache(k=kcs, v=vcs)
+
+
+def decode_step(params: dict, cache: KVCache, token: jax.Array, pos: jax.Array,
+                cfg: LMConfig):
+    """One decode step. token [B] int32, pos [B] absolute positions.
+    Returns (logits [B, V] f32, updated cache).
+
+    §Perf: the cache rides the scan CARRY and is updated with per-layer
+    in-place scatters — XLA aliases the donated buffers, so HBM traffic is
+    cache-READ + one-slot write instead of a full cache rewrite (the
+    baseline passed the cache through scan xs/ys, which materializes a
+    second full cache: ~2x the memory term on decode cells).
+    """
+    B = token.shape[0]
+    L = cfg.n_layers
+    x = params["embed"][token]
+    x = constrain(x, "batch", None)
+    cos, sin = rope_angles(pos, cfg.d_head, cfg.rope_theta)
+
+    def layer(carry, xs):
+        x, k_all, v_all = carry
+        lp, li = xs
+        x, (kc, vc) = _attn_block(
+            x, lp, cfg, cos, sin, mode="decode", kc=k_all[li], vc=v_all[li],
+            pos=pos
+        )
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, li, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, li, 0)
+        x, _ = _ffn_block(x, lp, cfg)
+        return (x, k_all, v_all), None
+
+    (x, kcs, vcs), _ = maybe_scan(
+        layer, (x, cache.k, cache.v),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)), unroll=cfg.unroll
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits, KVCache(k=kcs, v=vcs)

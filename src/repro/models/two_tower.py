@@ -1,0 +1,133 @@
+"""Two-tower retrieval (YouTube/RecSys'19): huge sparse embedding tables ->
+EmbeddingBag (gather + segment-sum; JAX has no native EmbeddingBag — built
+on the segment-op substrate) -> per-tower MLP 1024-512-256 -> dot product,
+trained with in-batch sampled softmax + logQ correction.
+
+Sharding: embedding tables row-sharded over ('data','model') (the 'rows'
+logical axis); tower MLPs replicated; batch over ('pod','data').  The
+lookup gather over row-sharded tables is GSPMD'd into an all-gather of the
+*hit rows only* pattern (collective-permute heavy — a roofline cell worth
+watching, see EXPERIMENTS.md).
+
+This model is also the paper-integration point: the transaction stream
+that feeds training is filtered by Spade's benign/urgent classifier
+(``examples/fraud_aware_recsys.py``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.dist.sharding import constrain
+from repro.graphstore.segment_ops import embedding_bag
+from repro.models.layers import Initializer
+
+__all__ = [
+    "RecsysBatch",
+    "init_two_tower_params",
+    "user_tower",
+    "item_tower",
+    "two_tower_loss",
+    "score_pairs",
+    "retrieval_scores",
+]
+
+
+class RecsysBatch(NamedTuple):
+    """One training batch: multi-hot categorical fields per tower.
+
+    ``user_idx``: [B, Fu, M] int32 lookups (M = multi-hot width);
+    ``user_wt``: [B, Fu, M] f32 per-lookup weights (0 = padding).
+    """
+
+    user_idx: jax.Array
+    user_wt: jax.Array
+    item_idx: jax.Array
+    item_wt: jax.Array
+    log_q: jax.Array  # [B] sampling log-probability of each in-batch item
+
+
+def init_two_tower_params(key: jax.Array, cfg: RecsysConfig) -> dict:
+    init = Initializer(key)
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.embed_dim
+
+    def tower(dims):
+        return {
+            f"w{i}": init((a, b), fan_in=a, dtype=dt)
+            for i, (a, b) in enumerate(zip(dims[:-1], dims[1:]))
+        } | {f"b{i}": jnp.zeros((b,), dt) for i, b in enumerate(dims[1:])}
+
+    u_in = cfg.n_user_fields * D
+    i_in = cfg.n_item_fields * D
+    return {
+        "user_table": init((cfg.user_vocab, D), fan_in=D, dtype=dt) * 0.05,
+        "item_table": init((cfg.item_vocab, D), fan_in=D, dtype=dt) * 0.05,
+        "user_mlp": tower([u_in, *cfg.tower_mlp]),
+        "item_mlp": tower([i_in, *cfg.tower_mlp]),
+        "temp": jnp.asarray(20.0, dt),
+    }
+
+
+def _bag(table, idx, wt, D):
+    """[B, F, M] lookups -> [B, F*D] concatenated bag embeddings."""
+    B, F, M = idx.shape
+    flat_idx = idx.reshape(-1)
+    bag_ids = jnp.repeat(jnp.arange(B * F), M)
+    out = embedding_bag(table, flat_idx, bag_ids, B * F, weights=wt.reshape(-1))
+    return out.reshape(B, F * D)
+
+
+def _tower(p, x, n_layers):
+    for i in range(n_layers):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n_layers - 1:
+            x = jax.nn.relu(x)
+    # L2-normalized embeddings (standard for dot-product retrieval)
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-9)
+
+
+def user_tower(params, idx, wt, cfg: RecsysConfig):
+    x = _bag(params["user_table"], idx, wt, cfg.embed_dim)
+    x = constrain(x, "batch", None)
+    return _tower(params["user_mlp"], x, len(cfg.tower_mlp))
+
+
+def item_tower(params, idx, wt, cfg: RecsysConfig):
+    x = _bag(params["item_table"], idx, wt, cfg.embed_dim)
+    x = constrain(x, "batch", None)
+    return _tower(params["item_mlp"], x, len(cfg.tower_mlp))
+
+
+def two_tower_loss(params, batch: RecsysBatch, cfg: RecsysConfig):
+    """In-batch sampled softmax with logQ correction."""
+    u = user_tower(params, batch.user_idx, batch.user_wt, cfg)  # [B, D]
+    it = item_tower(params, batch.item_idx, batch.item_wt, cfg)  # [B, D]
+    logits = (u @ it.T) * params["temp"]  # [B, B]
+    logits = logits - batch.log_q[None, :]  # correct for sampling bias
+    logits = constrain(logits, "batch", None)
+    labels = jnp.arange(u.shape[0])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = (lse - ll).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"in_batch_acc": acc}
+
+
+def score_pairs(params, batch: RecsysBatch, cfg: RecsysConfig):
+    """Online/offline scoring: one score per (user, item) row."""
+    u = user_tower(params, batch.user_idx, batch.user_wt, cfg)
+    it = item_tower(params, batch.item_idx, batch.item_wt, cfg)
+    return jnp.sum(u * it, axis=-1) * params["temp"]
+
+
+def retrieval_scores(params, user_idx, user_wt, cand_emb, cfg: RecsysConfig, top_k=100):
+    """One query against N precomputed candidate embeddings (batched dot,
+    not a loop): returns (top-k scores, indices)."""
+    u = user_tower(params, user_idx, user_wt, cfg)  # [1, D]
+    scores = (cand_emb @ u[0]) * params["temp"]  # [N]
+    return jax.lax.top_k(scores, top_k)

@@ -1,0 +1,5 @@
+from .device_service import DeviceServiceReport, run_device_service
+from .service import ServiceReport, run_service
+
+__all__ = ["ServiceReport", "run_service", "DeviceServiceReport",
+           "run_device_service"]

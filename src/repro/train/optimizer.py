@@ -1,0 +1,102 @@
+"""AdamW + train-state (pure pytrees, donate-friendly, shardable).
+
+Master params are kept in the model's compute dtype; Adam moments in f32.
+The update math runs in f32 regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamConfig", "TrainState", "init_train_state", "adamw_update", "global_norm",
+           "cosine_lr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["params", "m", "v", "step", "err"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    m: Any
+    v: Any
+    step: jax.Array
+    err: Any = None  # gradient-compression error-feedback buffers (optional)
+
+
+def init_train_state(params: Any, with_error_feedback: bool = False) -> TrainState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return TrainState(
+        params=params,
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+        err=jax.tree.map(zeros, params) if with_error_feedback else None,
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def cosine_lr(cfg: AdamConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def adamw_update(state: TrainState, grads: Any, cfg: AdamConfig) -> tuple[TrainState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(state.params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return (
+        dataclasses.replace(state, params=new_p, m=new_m, v=new_v, step=step),
+        {"grad_norm": gnorm, "lr": lr},
+    )

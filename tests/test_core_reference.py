@@ -1,0 +1,274 @@
+"""Exactness tests for the host-plane Spade oracle.
+
+The load-bearing invariant (paper §4 correctness): after any sequence of
+incremental ``insert_edges`` calls, the peeling sequence/weights are
+*identical* to a from-scratch run of Algorithm 1 on the updated graph.
+We verify against an independent naive O(V^2) peel implementation and via
+hypothesis property tests with integer weights (exact float arithmetic).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reference import (
+    AdjGraph,
+    density_sequence,
+    detect,
+    insert_edges,
+    static_peel,
+)
+
+# ---------------------------------------------------------------------------
+# independent naive implementation (no heap, no shared code paths)
+# ---------------------------------------------------------------------------
+
+
+def naive_peel(g: AdjGraph):
+    n = g.n
+    w = g.a[:n].astype(np.float64).copy()
+    for u in range(n):
+        w[u] += sum(g.adj[u].values())
+    remaining = set(range(n))
+    order, delta = [], []
+    while remaining:
+        u = min(remaining, key=lambda x: (w[x], x))
+        order.append(u)
+        delta.append(w[u])
+        remaining.discard(u)
+        for v, c in g.adj[u].items():
+            if v in remaining:
+                w[v] -= c
+    return np.array(order), np.array(delta)
+
+
+def brute_best_density(g: AdjGraph):
+    """Exhaustive argmax_g over all non-empty subsets (tiny graphs only)."""
+    n = g.n
+    best = -1.0
+    for r in range(1, n + 1):
+        for S in itertools.combinations(range(n), r):
+            Sset = set(S)
+            f = sum(g.a[u] for u in S)
+            for u in S:
+                for v, c in g.adj[u].items():
+                    if v in Sset and v > u:
+                        f += c
+                    elif v == u:
+                        f += c  # self loop counted once
+            best = max(best, f / len(S))
+    return best
+
+
+def random_graph(rng, n, m, int_weights=True, priors=True):
+    g = AdjGraph(n)
+    if priors:
+        g.a[:n] = rng.integers(0, 4, size=n).astype(np.float64)
+    edges = []
+    for _ in range(m):
+        u = int(rng.integers(0, n))
+        v = int(rng.integers(0, n))
+        if u == v:
+            continue
+        c = float(rng.integers(1, 6)) if int_weights else float(rng.random() + 0.1)
+        g.add_edge(u, v, c)
+        edges.append((u, v, c))
+    return g, edges
+
+
+# ---------------------------------------------------------------------------
+# static peel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_static_peel_matches_naive(seed):
+    rng = np.random.default_rng(seed)
+    g, _ = random_graph(rng, n=40, m=120)
+    state = static_peel(g.copy())
+    o2, d2 = naive_peel(g)
+    np.testing.assert_array_equal(state.order(), o2)
+    np.testing.assert_allclose(state.delta(), d2)
+
+
+def test_static_peel_f_consistency():
+    rng = np.random.default_rng(0)
+    g, _ = random_graph(rng, n=50, m=200)
+    state = static_peel(g)
+    # sum of peel-time weights == f(V)
+    assert np.isclose(state.delta().sum(), g.f_total())
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_two_approximation(seed):
+    rng = np.random.default_rng(100 + seed)
+    g, _ = random_graph(rng, n=9, m=20)
+    state = static_peel(g.copy())
+    _, g_best = detect(state)
+    g_star = brute_best_density(g)
+    assert g_best >= 0.5 * g_star - 1e-9
+    assert g_best <= g_star + 1e-9
+
+
+def test_detect_matches_density_sequence():
+    rng = np.random.default_rng(7)
+    g, _ = random_graph(rng, n=30, m=90)
+    state = static_peel(g)
+    comm, gb = detect(state)
+    gseq = density_sequence(state)
+    assert np.isclose(gb, gseq.max())
+    m = int(np.argmax(gseq))
+    np.testing.assert_array_equal(np.sort(comm), np.sort(state.order()[m:]))
+
+
+# ---------------------------------------------------------------------------
+# incremental == from-scratch (the paper's core claim)
+# ---------------------------------------------------------------------------
+
+
+def check_incremental_equals_scratch(n, all_edges, n_base, batch_sizes, priors=None):
+    base, inc = all_edges[:n_base], all_edges[n_base:]
+    g = AdjGraph(n)
+    if priors is not None:
+        g.a[:n] = priors
+    for u, v, c in base:
+        g.add_edge(u, v, c)
+    state = static_peel(g)
+
+    i = 0
+    for b in itertools.cycle(batch_sizes):
+        if i >= len(inc):
+            break
+        batch = inc[i : i + b]
+        i += b
+        insert_edges(state, batch)
+
+    full = AdjGraph(n)
+    if priors is not None:
+        full.a[:n] = priors
+    for u, v, c in all_edges:
+        full.add_edge(u, v, c)
+    expect = static_peel(full)
+
+    np.testing.assert_array_equal(state.order(), expect.order())
+    np.testing.assert_allclose(state.delta(), expect.delta())
+    c1, g1 = detect(state)
+    c2, g2 = detect(expect)
+    assert np.isclose(g1, g2)
+    np.testing.assert_array_equal(np.sort(c1), np.sort(c2))
+
+
+@pytest.mark.parametrize("seed,batch", [(s, b) for s in range(6) for b in (1, 3, 7)])
+def test_incremental_random(seed, batch):
+    rng = np.random.default_rng(seed)
+    n, m = 35, 140
+    _, edges = random_graph(rng, n, m)
+    priors = rng.integers(0, 3, size=n).astype(np.float64)
+    check_incremental_equals_scratch(n, edges, int(len(edges) * 0.6), [batch], priors)
+
+
+def test_incremental_dense_community_emerges():
+    """Inject a dense block via increments; detection must converge to it."""
+    rng = np.random.default_rng(42)
+    n = 60
+    g = AdjGraph(n)
+    edges = []
+    for _ in range(80):  # sparse background
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            c = float(rng.integers(1, 3))
+            g.add_edge(int(u), int(v), c)
+            edges.append((int(u), int(v), c))
+    state = static_peel(g)
+    block = list(range(10))  # fraudsters 0..9, fully connected heavy edges
+    for u in block:
+        for v in block:
+            if u < v:
+                insert_edges(state, [(u, v, 10.0)])
+    comm, gb = detect(state)
+    assert set(block).issubset(set(comm.tolist()))
+    # cross-check against scratch
+    expect = static_peel(state.graph.copy())
+    np.testing.assert_array_equal(state.order(), expect.order())
+
+
+def test_incremental_with_new_vertices():
+    rng = np.random.default_rng(3)
+    n = 20
+    g, edges = random_graph(rng, n, 50)
+    state = static_peel(g)
+    # two new vertices joining with edges (dense ids)
+    insert_edges(state, [(20, 5, 4.0)], new_vertices=[(20, 1.0)])
+    insert_edges(state, [(21, 20, 2.0), (3, 21, 7.0)], new_vertices=[(21, 0.0)])
+    expect = static_peel(state.graph.copy())
+    np.testing.assert_array_equal(state.order(), expect.order())
+    np.testing.assert_allclose(state.delta(), expect.delta())
+
+
+def test_insert_between_far_apart_positions():
+    """Edge between the first-peeled and last-peeled vertices."""
+    rng = np.random.default_rng(11)
+    g, _ = random_graph(rng, 30, 80)
+    state = static_peel(g)
+    first, last = int(state.order()[0]), int(state.order()[-1])
+    insert_edges(state, [(first, last, 3.0)])
+    expect = static_peel(state.graph.copy())
+    np.testing.assert_array_equal(state.order(), expect.order())
+
+
+def test_parallel_edge_accumulation():
+    g = AdjGraph(3)
+    g.add_edge(0, 1, 1.0)
+    state = static_peel(g)
+    insert_edges(state, [(0, 1, 2.0), (1, 0, 1.0)])  # multi-edges both ways
+    assert state.graph.adj[0][1] == 4.0
+    expect = static_peel(state.graph.copy())
+    np.testing.assert_array_equal(state.order(), expect.order())
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+edge_strategy = st.tuples(
+    st.integers(0, 11), st.integers(0, 11), st.integers(1, 5)
+).filter(lambda e: e[0] != e[1])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    edges=st.lists(edge_strategy, min_size=1, max_size=40),
+    split=st.floats(0.0, 1.0),
+    batch=st.integers(1, 5),
+    priors=st.lists(st.integers(0, 3), min_size=12, max_size=12),
+)
+def test_property_incremental_equals_scratch(edges, split, batch, priors):
+    n = 12
+    all_edges = [(u, v, float(c)) for u, v, c in edges]
+    n_base = int(len(all_edges) * split)
+    check_incremental_equals_scratch(
+        n, all_edges, n_base, [batch], np.array(priors, dtype=np.float64)
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    edges=st.lists(edge_strategy, min_size=2, max_size=30),
+    k=st.integers(1, 6),
+)
+def test_property_affected_area_bounded(edges, k):
+    """|V_T| never exceeds |V|; reorder stats are sane."""
+    n = 12
+    all_edges = [(u, v, float(c)) for u, v, c in edges]
+    g = AdjGraph(n)
+    base, tail = all_edges[:-k] or all_edges[:1], all_edges[-k:]
+    for u, v, c in base:
+        g.add_edge(u, v, c)
+    state = static_peel(g)
+    stats = insert_edges(state, tail)
+    assert stats.n_pending <= n + stats.n_new_vertices
+    assert stats.n_inserted_edges == len(tail)

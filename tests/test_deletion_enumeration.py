@@ -1,0 +1,120 @@
+"""Paper Appendix C: incremental edge deletion (C.1), dense-subgraph
+enumeration (C.2), and time-window detection by insert+delete composition
+(C.3)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reference import (
+    AdjGraph,
+    delete_edge,
+    detect,
+    enumerate_communities,
+    insert_edges,
+    static_peel,
+)
+
+
+def random_graph(rng, n, m):
+    g = AdjGraph(n)
+    g.a[:n] = rng.integers(0, 3, n).astype(np.float64)
+    edges = []
+    for _ in range(m):
+        u, v = rng.integers(0, n, 2)
+        if u == v:
+            continue
+        c = float(rng.integers(1, 6))
+        g.add_edge(int(u), int(v), c)
+        edges.append((int(u), int(v), c))
+    return g, edges
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_delete_matches_scratch(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 30, 100
+    g, edges = random_graph(rng, n, m)
+    state = static_peel(g)
+    # delete a handful of existing (combined) edges entirely
+    for _ in range(10):
+        u = int(rng.integers(0, n))
+        if not state.graph.adj[u]:
+            continue
+        v = list(state.graph.adj[u].keys())[0]
+        if v == u:
+            continue
+        delete_edge(state, u, v)
+        expect = static_peel(state.graph.copy())
+        np.testing.assert_array_equal(state.order(), expect.order())
+        np.testing.assert_allclose(state.delta(), expect.delta())
+
+
+def test_partial_weight_deletion():
+    g = AdjGraph(4)
+    g.add_edge(0, 1, 5.0)
+    g.add_edge(1, 2, 3.0)
+    g.add_edge(2, 3, 1.0)
+    state = static_peel(g)
+    delete_edge(state, 0, 1, c=2.0)  # partial
+    assert np.isclose(state.graph.adj[0][1], 3.0)
+    expect = static_peel(state.graph.copy())
+    np.testing.assert_array_equal(state.order(), expect.order())
+
+
+edge_strategy = st.tuples(
+    st.integers(0, 9), st.integers(0, 9), st.integers(1, 5)
+).filter(lambda e: e[0] != e[1])
+
+
+@settings(max_examples=40, deadline=None)
+@given(edges=st.lists(edge_strategy, min_size=3, max_size=30),
+       which=st.integers(0, 10**6))
+def test_property_delete_equals_scratch(edges, which):
+    n = 10
+    g = AdjGraph(n)
+    for u, v, c in edges:
+        g.add_edge(u, v, float(c))
+    state = static_peel(g)
+    u, v, _ = edges[which % len(edges)]
+    if v not in state.graph.adj[u]:
+        return
+    delete_edge(state, u, v)
+    expect = static_peel(state.graph.copy())
+    np.testing.assert_array_equal(state.order(), expect.order())
+    np.testing.assert_allclose(state.delta(), expect.delta())
+
+
+def test_insert_then_delete_roundtrip():
+    """C.3 building block: inserting then deleting an edge restores the
+    exact from-scratch state of the original graph."""
+    rng = np.random.default_rng(3)
+    g, _ = random_graph(rng, 25, 80)
+    before = static_peel(g.copy())
+    state = static_peel(g.copy())
+    insert_edges(state, [(3, 17, 4.0)])
+    delete_edge(state, 3, 17, c=4.0)
+    np.testing.assert_array_equal(state.order(), before.order())
+    np.testing.assert_allclose(state.delta(), before.delta())
+
+
+def test_enumerate_finds_planted_blocks():
+    rng = np.random.default_rng(5)
+    n = 80
+    g, _ = random_graph(rng, n, 60)
+    b1, b2 = np.arange(10), np.arange(40, 48)
+    for blk, w in [(b1, 20.0), (b2, 12.0)]:
+        for i in blk:
+            for j in blk:
+                if i < j:
+                    g.add_edge(int(i), int(j), w)
+    comms = enumerate_communities(g, max_k=3)
+    assert len(comms) >= 2
+    found = [set(c.tolist()) for c, _ in comms]
+    assert any(set(b1.tolist()) <= f for f in found)
+    assert any(set(b2.tolist()) <= f for f in found)
+    # densities decreasing
+    dens = [d for _, d in comms]
+    assert all(dens[i] >= dens[i + 1] - 1e-9 for i in range(len(dens) - 1))

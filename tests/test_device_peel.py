@@ -1,0 +1,202 @@
+"""Device plane (JAX) vs host oracle: exact peel equality, bulk-peel
+guarantees, and incremental suffix re-peel invariants."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.incremental import (
+    benign_mask,
+    full_refresh,
+    init_state,
+    insert_and_maintain,
+)
+from repro.core.peel import bulk_peel, bulk_peel_warm, exact_peel
+from repro.core.reference import AdjGraph, detect, static_peel
+from repro.graphstore.structs import device_graph_from_coo
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_coo(rng, n, m, int_weights=True):
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    c = rng.integers(1, 6, src.shape[0]).astype(np.float32)
+    a = rng.integers(0, 3, n).astype(np.float32)
+    return src, dst, c, a
+
+
+def to_oracle(n, src, dst, c, a):
+    return AdjGraph.from_arrays(n, src, dst, c, a)
+
+
+# ---------------------------------------------------------------------------
+# exact sequential peel == host oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_exact_peel_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 24, 70
+    src, dst, c, a = random_coo(rng, n, m)
+    g = device_graph_from_coo(n, src, dst, c, a)
+    res = jax.jit(exact_peel)(g)
+    host = static_peel(to_oracle(n, src, dst, c, a))
+    np.testing.assert_array_equal(np.asarray(res.order[:n]), host.order())
+    np.testing.assert_allclose(np.asarray(res.delta[:n]), host.delta(), rtol=1e-6)
+    _, g_host = detect(host)
+    assert np.isclose(float(res.best_g), g_host, rtol=1e-6)
+
+
+def test_exact_peel_with_capacity_padding():
+    rng = np.random.default_rng(9)
+    n, m = 15, 40
+    src, dst, c, a = random_coo(rng, n, m)
+    g = device_graph_from_coo(n, src, dst, c, a, n_capacity=32, e_capacity=128)
+    res = jax.jit(exact_peel)(g)
+    host = static_peel(to_oracle(n, src, dst, c, a))
+    np.testing.assert_array_equal(np.asarray(res.order[:n]), host.order())
+
+
+# ---------------------------------------------------------------------------
+# bulk peel: approximation guarantee + planted-community recovery
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,eps", [(0, 0.1), (1, 0.1), (2, 0.5), (3, 0.01)])
+def test_bulk_peel_guarantee_vs_exact(seed, eps):
+    rng = np.random.default_rng(seed)
+    n, m = 40, 150
+    src, dst, c, a = random_coo(rng, n, m)
+    g = device_graph_from_coo(n, src, dst, c, a)
+    bulk = bulk_peel(g, eps=eps)
+    host = static_peel(to_oracle(n, src, dst, c, a))
+    _, g_seq = detect(host)
+    # sequential-peel best is itself >= g*/2; bulk must be >= g*/(2(1+eps))
+    # and g* >= g_seq, so bulk >= g_seq / (2(1+eps)) is implied; check the
+    # direct relation instead: bulk best cannot beat optimal, and must be
+    # within its guarantee of the sequential result.
+    assert float(bulk.best_g) >= g_seq / (2.0 * (1.0 + eps)) - 1e-5
+    # community mask consistent with level bookkeeping
+    comm = np.asarray(bulk.community_mask() & g.vertex_mask)
+    assert comm.sum() > 0
+
+
+def test_bulk_peel_finds_planted_clique():
+    rng = np.random.default_rng(5)
+    n = 200
+    src, dst, c, a = random_coo(rng, n, 300)
+    block = np.arange(10)
+    bs, bd = np.meshgrid(block, block)
+    mask = bs < bd
+    src = np.concatenate([src, bs[mask]])
+    dst = np.concatenate([dst, bd[mask]])
+    c = np.concatenate([c, np.full(mask.sum(), 10.0, np.float32)])
+    g = device_graph_from_coo(n, src, dst, c, a)
+    res = bulk_peel(g, eps=0.1)
+    comm = np.where(np.asarray(res.community_mask()))[0]
+    assert set(block.tolist()).issubset(set(comm.tolist()))
+    assert int(res.n_rounds) < n  # genuinely bulk: far fewer rounds than V
+
+
+# ---------------------------------------------------------------------------
+# incremental maintenance
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_matches_refresh_guarantee():
+    rng = np.random.default_rng(6)
+    n, m = 100, 250
+    src, dst, c, a = random_coo(rng, n, m)
+    g = device_graph_from_coo(n, src, dst, c, a, e_capacity=m + 256)
+    state = init_state(g, eps=0.1)
+
+    # stream 8 batches of 16 edges
+    for i in range(8):
+        bs = rng.integers(0, n, 16).astype(np.int32)
+        bd = rng.integers(0, n, 16).astype(np.int32)
+        valid = bs != bd
+        bc = rng.integers(1, 6, 16).astype(np.float32)
+        state = insert_and_maintain(
+            state, jnp.asarray(bs), jnp.asarray(bd), jnp.asarray(bc),
+            jnp.asarray(valid), eps=0.1
+        )
+
+    # maintained best must be >= the from-scratch bulk best / never regress,
+    # and both must satisfy the guarantee vs the exact sequential peel.
+    fresh = full_refresh(state, eps=0.1)
+    assert float(state.best_g) >= float(fresh.best_g) - 1e-5
+    host_g = to_oracle(
+        n,
+        np.asarray(state.graph.src)[np.asarray(state.graph.edge_mask)],
+        np.asarray(state.graph.dst)[np.asarray(state.graph.edge_mask)],
+        np.asarray(state.graph.c)[np.asarray(state.graph.edge_mask)],
+        np.asarray(state.graph.a)[:n],
+    )
+    _, g_seq = detect(static_peel(host_g))
+    assert float(state.best_g) >= g_seq / 2.2 - 1e-5
+
+
+def test_incremental_detects_emerging_fraud_block():
+    rng = np.random.default_rng(7)
+    n, m = 150, 300
+    src, dst, c, a = random_coo(rng, n, m)
+    g = device_graph_from_coo(n, src, dst, c, a, e_capacity=m + 512)
+    state = init_state(g, eps=0.1)
+    g0 = float(state.best_g)
+
+    block = np.arange(20, 28)
+    for u in block:
+        for v in block:
+            if u < v:
+                state = insert_and_maintain(
+                    state,
+                    jnp.asarray([u], jnp.int32),
+                    jnp.asarray([v], jnp.int32),
+                    jnp.asarray([8.0], jnp.float32),
+                    jnp.asarray([True]),
+                    eps=0.1,
+                )
+    comm = np.where(np.asarray(state.community))[0]
+    assert set(block.tolist()).issubset(set(comm.tolist()))
+    assert float(state.best_g) > g0
+
+
+def test_benign_mask_is_conservative():
+    rng = np.random.default_rng(8)
+    n, m = 80, 200
+    src, dst, c, a = random_coo(rng, n, m)
+    g = device_graph_from_coo(n, src, dst, c, a, e_capacity=m + 64)
+    state = init_state(g, eps=0.1)
+    # heavy edge into the current community must be urgent
+    comm = np.where(np.asarray(state.community))[0]
+    bm = benign_mask(
+        state,
+        jnp.asarray([comm[0]], jnp.int32),
+        jnp.asarray([comm[-1]], jnp.int32),
+        jnp.asarray([100.0], jnp.float32),
+    )
+    assert not bool(bm[0])
+
+
+def test_empty_batch_noop():
+    rng = np.random.default_rng(10)
+    n, m = 30, 60
+    src, dst, c, a = random_coo(rng, n, m)
+    g = device_graph_from_coo(n, src, dst, c, a, e_capacity=m + 32)
+    state = init_state(g, eps=0.1)
+    lvl0 = np.asarray(state.level).copy()
+    m_real = int(jnp.sum(g.edge_mask))
+    z = jnp.zeros(4, jnp.int32)
+    state2 = insert_and_maintain(
+        state, z, z, z.astype(jnp.float32), jnp.zeros(4, bool), eps=0.1
+    )
+    assert int(state2.edge_count) == m_real
+    np.testing.assert_array_equal(np.asarray(state2.level), lvl0)

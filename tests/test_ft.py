@@ -1,0 +1,157 @@
+"""Fault-tolerance layer: checkpoint/restore (+async, atomic, keep-k),
+restart-resume, elastic re-mesh/reshard, straggler watchdog, gradient
+compression."""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.compression import compress_grads, ef_compress_tree
+from repro.ft.checkpoint import CheckpointManager, latest_step, load_pytree, save_pytree
+from repro.ft.elastic import StepWatchdog, best_mesh_for, replan
+from repro.train.optimizer import AdamConfig, init_train_state
+from repro.train.train_step import make_train_step
+
+
+def tiny_state():
+    params = {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones(4)}
+    return init_train_state(params)
+
+
+def test_save_load_roundtrip(tmp_path):
+    st = tiny_state()
+    d = str(tmp_path / "ckpt")
+    save_pytree(st, d, step=7)
+    assert latest_step(d) == 7
+    st2 = load_pytree(st, d)
+    np.testing.assert_array_equal(np.asarray(st2.params["w"]), np.asarray(st.params["w"]))
+    assert int(st2.step) == 0
+
+
+def test_keep_k_retention_and_async(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, keep=2, every_steps=1)
+    st = tiny_state()
+    for i in range(1, 6):
+        mgr.maybe_save(st, i)
+    mgr.close()
+    steps = sorted(
+        int(x.split("_")[1]) for x in os.listdir(d) if x.startswith("step_")
+    )
+    assert steps == [4, 5]
+    mgr.check()
+
+
+def test_atomic_commit_no_tmp_left(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_pytree(tiny_state(), d, step=1)
+    assert not any(x.endswith(".tmp") for x in os.listdir(d))
+
+
+def test_resume_training_equivalence(tmp_path):
+    """Train 4 steps straight == train 2, checkpoint, restore, train 2."""
+    def loss(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    step = make_train_step(loss, AdamConfig(lr=1e-2, weight_decay=0.0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(8, 3)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+    }
+    sA = tiny_state()
+    for _ in range(4):
+        sA, _ = step(sA, batch)
+
+    sB = tiny_state()
+    for _ in range(2):
+        sB, _ = step(sB, batch)
+    d = str(tmp_path / "ck")
+    save_pytree(sB, d, step=2)
+    sB2 = load_pytree(tiny_state(), d)
+    for _ in range(2):
+        sB2, _ = step(sB2, batch)
+    np.testing.assert_allclose(
+        np.asarray(sA.params["w"]), np.asarray(sB2.params["w"]), rtol=1e-6
+    )
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Checkpoint saved under one mesh restores onto a smaller mesh."""
+    n = len(jax.devices())
+    if n < 1:
+        pytest.skip("no devices")
+    st = tiny_state()
+    d = str(tmp_path / "ck")
+    save_pytree(st, d, step=1)
+    mesh = best_mesh_for(1, 1)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), st)
+    st2 = load_pytree(st, d, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(st2.params["b"]), np.asarray(st.params["b"]))
+
+
+def test_replan_preserves_global_batch():
+    plan = replan(n_devices=1, model_axis=1, global_batch=64)
+    assert plan.global_batch == 64
+    assert plan.per_replica_batch * plan.mesh.devices.shape[0] == 64
+    with pytest.raises(ValueError):
+        best_mesh_for(1, model_axis=2)
+
+
+def test_watchdog_flags_stragglers():
+    dog = StepWatchdog(factor=3.0, min_history=3)
+    for i in range(5):
+        assert not dog.observe(i, 1.0)
+    assert dog.observe(5, 10.0)
+    assert dog.flagged == [5]
+    assert not dog.observe(6, 1.1)
+
+
+def test_compression_error_feedback_converges():
+    """EF compression: quantization error is re-injected, so the running sum
+    of dequantized grads tracks the true sum."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32)) * 0.01
+    err = jnp.zeros_like(g)
+    total_true, total_deq = np.zeros(256), np.zeros(256)
+    for _ in range(50):
+        deq, err = compress_grads(g, err)
+        total_true += np.asarray(g)
+        total_deq += np.asarray(deq)
+    # relative drift of the accumulated signal stays bounded by one quantum
+    scale = np.abs(np.asarray(g)).max() / 127.0
+    assert np.abs(total_true - total_deq).max() <= scale + 1e-6
+
+
+def test_compressed_training_still_learns():
+    def loss(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    step = make_train_step(
+        loss,
+        AdamConfig(lr=1e-2, weight_decay=0.0, warmup_steps=1, total_steps=10_000),
+        compress=True,
+    )
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32)),
+              "b": jnp.zeros(4)}
+    st = init_train_state(params, with_error_feedback=True)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(32, 3)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(size=(32, 4)).astype(np.float32)),
+    }
+    l0 = None
+    for i in range(30):
+        st, m = step(st, batch)
+        if i == 0:
+            l0 = float(m["loss"])
+    assert float(m["loss"]) < l0 * 0.7

@@ -1,0 +1,134 @@
+"""Behavioural tests for the Spade public API (Listing 1) + edge grouping."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import DG, DW, Spade, make_fd, static_peel
+from repro.core.reference import AdjGraph, detect
+
+
+def build_background(rng, n=40, m=100):
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    return n, src[keep], dst[keep], np.ones(keep.sum())
+
+
+def test_load_detect_dg():
+    rng = np.random.default_rng(0)
+    n, src, dst, w = build_background(rng)
+    sp = Spade(metric="DG")
+    sp.LoadGraph(src, dst, w, n_vertices=n)
+    comm, gb = sp.Detect()
+    assert gb > 0 and len(comm) > 0
+
+
+@pytest.mark.parametrize("metric", ["DG", "DW", "FD"])
+def test_insert_edge_matches_scratch(metric):
+    rng = np.random.default_rng(1)
+    n, src, dst, w = build_background(rng)
+    sp = Spade(metric=metric)
+    sp.LoadGraph(src, dst, w, n_vertices=n)
+    for _ in range(25):
+        u, v = rng.integers(0, n, 2)
+        if u == v:
+            continue
+        sp.InsertEdge(int(u), int(v), float(rng.integers(1, 5)))
+    # incremental state == from-scratch peel of the maintained graph
+    expect = static_peel(sp.graph.copy())
+    np.testing.assert_array_equal(sp.state.order(), expect.order())
+    np.testing.assert_allclose(sp.state.delta(), expect.delta())
+
+
+def test_fraud_block_detected_and_reported():
+    rng = np.random.default_rng(2)
+    n, src, dst, w = build_background(rng, n=60, m=80)
+    sp = Spade(metric="DW")
+    sp.LoadGraph(src, dst, w, n_vertices=n)
+    block = list(range(8))
+    seen_new = set()
+    for u in block:
+        for v in block:
+            if u < v:
+                res = sp.InsertEdge(u, v, 20.0)
+                seen_new.update(res.new_fraudsters.tolist())
+    comm, _ = sp.Detect()
+    assert set(block).issubset(set(comm.tolist()))
+    assert set(block).issubset(seen_new | set(block) & set(comm.tolist()))
+
+
+def test_edge_grouping_buffers_benign_and_flushes():
+    rng = np.random.default_rng(3)
+    n, src, dst, w = build_background(rng, n=50, m=150)
+    sp = Spade(metric="DG", edge_grouping=True)
+    sp.LoadGraph(src, dst, w, n_vertices=n)
+    g0 = sp.Detect()[1]
+    # find a benign edge: low-degree endpoints, tiny weight
+    res = None
+    for _ in range(100):
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if u == v:
+            continue
+        if sp._w0[u] + 1.0 < g0 and sp._w0[v] + 1.0 < g0:
+            res = sp.InsertEdge(u, v, 1.0)
+            break
+    if res is not None:
+        assert not res.triggered and res.buffered >= 1
+    # urgent edge: attach heavy weight to the current community
+    comm, _ = sp.Detect()
+    res2 = sp.InsertEdge(int(comm[0]), int(comm[-1]), 100.0)
+    assert res2.triggered and sp.buffered_edges == 0
+    # after flush everything must equal from-scratch
+    sp.FlushBuffer()
+    expect = static_peel(sp.graph.copy())
+    np.testing.assert_array_equal(sp.state.order(), expect.order())
+
+
+def test_edge_grouping_deferral_is_safe():
+    """Lemma 4.3/4.4: benign edges cannot create a denser community, so the
+    buffered state's community density matches scratch on flush."""
+    rng = np.random.default_rng(4)
+    n, src, dst, w = build_background(rng, n=40, m=120)
+    sp = Spade(metric="DG", edge_grouping=True)
+    sp.LoadGraph(src, dst, w, n_vertices=n)
+    for _ in range(30):
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if u != v:
+            sp.InsertEdge(u, v, 1.0)
+    sp.FlushBuffer()
+    expect = static_peel(sp.graph.copy())
+    _, g_expect = detect(expect)
+    _, g_got = sp.Detect()
+    assert np.isclose(g_got, g_expect)
+
+
+def test_new_vertices_via_api():
+    sp = Spade(metric="DW")
+    sp.LoadGraph([0, 1], [1, 2], [1.0, 1.0], n_vertices=3)
+    sp.InsertEdge(3, 0, 5.0)  # vertex 3 is new
+    sp.InsertEdge(4, 3, 2.0)  # vertex 4 is new
+    assert sp.graph.n == 5
+    expect = static_peel(sp.graph.copy())
+    np.testing.assert_array_equal(sp.state.order(), expect.order())
+
+
+def test_custom_vsusp_esusp_hooks():
+    sp = Spade(metric="DG")
+    sp.VSusp(lambda u, g: 2.0)
+    sp.ESusp(lambda u, v, raw, g: raw * 3.0)
+    sp.LoadGraph([0, 1], [1, 2], [1.0, 2.0], n_vertices=3)
+    assert sp.graph.a[0] == 2.0
+    assert sp.graph.adj[0][1] == 3.0
+    assert sp.graph.adj[1][2] == 6.0
+
+
+def test_fd_metric_degree_weighting():
+    fd = make_fd()
+    g = AdjGraph(3)
+    g.add_edge(0, 2, 1.0)
+    c1 = fd.edge_susp(0, 2, 1.0, g)
+    g.add_edge(1, 2, 1.0)
+    c2 = fd.edge_susp(1, 2, 1.0, g)
+    assert c2 < c1  # busier object vertex => less suspicious per edge
