@@ -152,3 +152,98 @@ def bench_device_plane(seed=3) -> list[Row]:
     t_inc = (time.perf_counter() - t0) / reps
     rows.append(("device_incremental_1024", t_inc * 1e6, t_inc / B * 1e6))
     return rows
+
+
+def bench_sharded_peel(
+    n=100_000,
+    m=400_000,
+    n_devices=8,
+    seed=3,
+    batch=1024,
+    out_json="BENCH_dist.json",
+) -> list[Row]:
+    """Dist plane: bulk peel + incremental tick, single device vs an
+    n-device edge-sharded mesh (forced CPU host devices; ratios transfer).
+    Writes ``out_json`` so the perf trajectory is recorded per commit."""
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.incremental import init_state, insert_and_maintain
+    from repro.core.peel import bulk_peel
+    from repro.dist.graph import (
+        init_sharded_state,
+        shard_graph,
+        sharded_bulk_peel,
+        sharded_insert_and_maintain,
+    )
+    from repro.graphstore.structs import device_graph_from_coo
+
+    nd = min(n_devices, len(jax.devices()))
+    mesh = jax.make_mesh((nd,), ("data",))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    g = device_graph_from_coo(
+        n, src[keep], dst[keep], np.ones(keep.sum(), np.float32),
+        e_capacity=keep.sum() + 65536,
+    )
+    gs = shard_graph(g, mesh)
+
+    def timed(f, reps=3):
+        out = jax.block_until_ready(f())  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = f()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps, out
+
+    t1, res1 = timed(lambda: bulk_peel(g, eps=0.1))
+    tn, resn = timed(lambda: sharded_bulk_peel(gs, mesh, eps=0.1))
+    assert float(resn.best_g) == float(res1.best_g)  # unit weights: exact
+    rows: list[Row] = [
+        ("sharded_bulk_peel_1dev", t1 * 1e6, float(res1.n_rounds)),
+        (f"sharded_bulk_peel_{nd}dev", tn * 1e6, t1 / max(tn, 1e-9)),
+    ]
+
+    bs = jnp.asarray(rng.integers(0, n, batch), jnp.int32)
+    bd = jnp.asarray(rng.integers(0, n, batch), jnp.int32)
+    bc = jnp.ones(batch, jnp.float32)
+    valid = bs != bd
+    reps = 5
+
+    state = init_state(g, eps=0.1)
+    state = insert_and_maintain(state, bs, bd, bc, valid, eps=0.1, max_rounds=20)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        state = insert_and_maintain(state, bs, bd, bc, valid, eps=0.1, max_rounds=20)
+    jax.block_until_ready(state.best_g)
+    t_i1 = (time.perf_counter() - t0) / reps
+
+    state = init_sharded_state(gs, mesh, eps=0.1)
+    state = sharded_insert_and_maintain(
+        state, bs, bd, bc, valid, mesh=mesh, eps=0.1, max_rounds=20
+    )
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        state = sharded_insert_and_maintain(
+            state, bs, bd, bc, valid, mesh=mesh, eps=0.1, max_rounds=20
+        )
+    jax.block_until_ready(state.best_g)
+    t_in = (time.perf_counter() - t0) / reps
+    rows.append(("sharded_tick_1dev", t_i1 * 1e6, t_i1 / batch * 1e6))
+    rows.append((f"sharded_tick_{nd}dev", t_in * 1e6, t_i1 / max(t_in, 1e-9)))
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(
+                {
+                    "n": int(n), "m": int(m), "devices": int(nd),
+                    "batch": int(batch),
+                    "rows": {r[0]: {"us": r[1], "derived": r[2]} for r in rows},
+                },
+                f, indent=1,
+            )
+    return rows

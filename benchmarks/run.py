@@ -11,26 +11,61 @@ host devices) and assembled by ``benchmarks.report``.
 from __future__ import annotations
 
 import argparse
+import os
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller graphs")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced XLA host devices for the sharded rows")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="only the dist-plane rows (BENCH_dist.json)")
     args = ap.parse_args()
 
-    from benchmarks.paper_tables import (
-        bench_device_plane,
-        bench_edge_grouping,
-        bench_incremental_speedup,
-        bench_prevention,
-    )
-
-    kw = dict(n=4000, m=20000, n_inc=600) if args.quick else {}
     rows = []
-    rows += bench_incremental_speedup(**kw)
-    rows += bench_edge_grouping(**({"n": 4000, "m": 20000, "n_inc": 600} if args.quick else {}))
-    rows += bench_prevention()
-    rows += bench_device_plane()
+    if args.sharded_only:
+        # must precede jax backend init (first jax.devices() call below)
+        if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count={args.devices} "
+                + os.environ.get("XLA_FLAGS", "")
+            ).strip()
+        from benchmarks.paper_tables import bench_sharded_peel
+
+        skw = dict(n=20_000, m=80_000) if args.quick else {}
+        rows += bench_sharded_peel(n_devices=args.devices, **skw)
+    else:
+        from benchmarks.paper_tables import (
+            bench_device_plane,
+            bench_edge_grouping,
+            bench_incremental_speedup,
+            bench_prevention,
+        )
+
+        kw = dict(n=4000, m=20000, n_inc=600) if args.quick else {}
+        rows += bench_incremental_speedup(**kw)
+        rows += bench_edge_grouping(**({"n": 4000, "m": 20000, "n_inc": 600} if args.quick else {}))
+        rows += bench_prevention()
+        rows += bench_device_plane()
+        # sharded rows run in a subprocess: the forced multi-device
+        # topology must not contaminate the legacy single-device rows
+        # (this backend is already initialized single-device by now)
+        import subprocess
+        import sys
+
+        cmd = [sys.executable, "-m", "benchmarks.run", "--sharded-only",
+               "--devices", str(args.devices)]
+        if args.quick:
+            cmd.append("--quick")
+        res = subprocess.run(cmd, capture_output=True, text=True)
+        if res.returncode != 0:
+            raise SystemExit(f"sharded benchmark subprocess failed:\n{res.stderr}")
+        for line in res.stdout.strip().splitlines():
+            if line.startswith("name,") or not line.strip():
+                continue
+            name, us, derived = line.split(",")
+            rows.append((name, float(us), float(derived)))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

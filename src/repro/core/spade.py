@@ -122,7 +122,7 @@ class Spade:
         any_urgent = False
         for u, v, raw in edges:
             u, v = int(u), int(v)
-            pending_new.extend(self._admit_vertices(u, v))
+            pending_new.extend(self._admit_vertices(u, v, pending=pending_new))
             c = self._metric.edge_susp(u, v, float(raw), self._g)
             pending_edges.append((u, v, c))
             # O(1) benign/urgent test (Def 4.1) against the cached g(S^P)
@@ -183,17 +183,29 @@ class Spade:
         if self._state is None:
             raise RuntimeError("call LoadGraph first")
 
-    def _admit_vertices(self, *vids: int) -> list[tuple[int, float]]:
-        """Vertices not yet in the graph are scheduled for head insertion."""
+    def _admit_vertices(
+        self, *vids: int, pending: Sequence[tuple[int, float]] = ()
+    ) -> list[tuple[int, float]]:
+        """Vertices not yet in the graph are scheduled for head insertion.
+
+        ``pending`` holds vertices already admitted by earlier edges of the
+        *current* batch (they are not yet in ``_benign_new_vertices``), so
+        a batch introducing several new vertices via separate edges counts
+        them toward the next dense id.
+        """
         out: list[tuple[int, float]] = []
         for vid in sorted(set(vids)):
-            next_id = self._g.n + len(out) + len(self._benign_new_vertices)
+            next_id = (
+                self._g.n + len(out) + len(pending) + len(self._benign_new_vertices)
+            )
             if vid > next_id:
                 # ids must arrive densely; generators guarantee this
                 raise ValueError(f"vertex id {vid} skips ahead of next id {next_id}")
             if vid >= self._g.n:
-                already = any(x[0] == vid for x in self._benign_new_vertices) or any(
-                    x[0] == vid for x in out
+                already = (
+                    any(x[0] == vid for x in self._benign_new_vertices)
+                    or any(x[0] == vid for x in pending)
+                    or any(x[0] == vid for x in out)
                 )
                 if not already:
                     a = self._metric.vertex_susp(vid, self._g)

@@ -1,0 +1,46 @@
+"""repro.dist — the distribution plane.
+
+* :mod:`repro.dist.sharding` — logical-axis layer: ``AxisEnv`` maps
+  logical names ("batch", "edges", ...) onto physical mesh axes;
+  ``constrain`` / ``tree_shardings`` lower annotations to GSPMD.
+* :mod:`repro.dist.compression` — error-feedback int8 gradient
+  compression for the slow inter-pod gradient all-reduce.
+* :mod:`repro.dist.graph` — mesh-sharded incremental peeling: edge
+  buffers partitioned along a data axis, replicated vertex state, one
+  fused psum per peel round.
+"""
+
+from repro.dist.compression import compress_grads, ef_compress_tree
+from repro.dist.graph import (
+    init_sharded_state,
+    shard_graph,
+    sharded_bulk_peel,
+    sharded_bulk_peel_warm,
+    sharded_full_refresh,
+    sharded_insert_and_maintain,
+    sharded_peel_weights,
+)
+from repro.dist.sharding import (
+    AxisEnv,
+    axis_env,
+    constrain,
+    tree_shardings,
+    use_axis_env,
+)
+
+__all__ = [
+    "AxisEnv",
+    "axis_env",
+    "constrain",
+    "tree_shardings",
+    "use_axis_env",
+    "compress_grads",
+    "ef_compress_tree",
+    "shard_graph",
+    "sharded_peel_weights",
+    "sharded_bulk_peel",
+    "sharded_bulk_peel_warm",
+    "init_sharded_state",
+    "sharded_insert_and_maintain",
+    "sharded_full_refresh",
+]

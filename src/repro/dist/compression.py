@@ -1,0 +1,66 @@
+"""Error-feedback int8 gradient compression (the dist plane's wire format).
+
+Gradient all-reduces across the slow inter-pod hop move 4 bytes/param per
+step; quantizing to int8 with a per-tensor scale cuts that 4x.  Naive
+quantization biases training, so the quantization residual is carried in
+an *error-feedback* buffer and re-injected before the next quantization
+(EF-SGD / 1-bit Adam argument): the accumulated dequantized signal tracks
+the accumulated true signal to within one quantum, so convergence is
+preserved.
+
+    deq, err' = EF(g, err):   x = g + err
+                              q = round(x / s) in int8,  s = max|x| / 127
+                              deq = q * s;   err' = x - deq
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compress_grads", "ef_compress_tree"]
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: returns (q int8, scale f32)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One EF compression step on a single tensor.
+
+    Returns ``(deq, err')``: the dequantized gradient (what the wire would
+    deliver) in ``g``'s dtype and the updated residual (f32).
+    """
+    x = g.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = quantize_int8(x)
+    deq = dequantize_int8(q, scale)
+    return deq.astype(g.dtype), x - deq
+
+
+def ef_compress_tree(grads: Any, err: Any = None) -> tuple[Any, Any]:
+    """EF compression over a gradient pytree.
+
+    ``err`` must match ``grads``' structure (or None to start from zero
+    residuals).  Returns ``(deq_tree, err_tree)``.
+    """
+    leaves_g, treedef = jax.tree.flatten(grads)
+    if err is None:
+        leaves_e = [jnp.zeros(g.shape, jnp.float32) for g in leaves_g]
+    else:
+        leaves_e = treedef.flatten_up_to(err)
+    out = [compress_grads(g, e) for g, e in zip(leaves_g, leaves_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )

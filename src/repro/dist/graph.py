@@ -1,0 +1,391 @@
+"""Mesh-sharded incremental peeling: the dist plane's graph engine.
+
+Dupin-style edge partitioning: a :class:`DeviceGraph`'s COO edge buffers
+are block-partitioned along one mesh axis while every vertex array stays
+replicated.  Each bulk-peel round is then embarrassingly parallel — every
+shard segment-sums the suspiciousness its *local* edges contribute to
+each vertex — followed by one ``psum`` that recovers the global
+per-vertex weight deltas (plus the scalar f/edge-loss terms, fused into
+the same all-reduce).  Thresholds, peel masks and the detected community
+are computed from the psum'd (replicated) quantities, so every shard
+takes the identical round sequence and the result matches single-device
+:func:`repro.core.peel.bulk_peel` exactly for order-robust weights
+(integer-valued suspiciousness sums are exact in f32) and up to
+reduction-order rounding otherwise.  The 2(1+eps) guarantee carries over
+unchanged: the sharded round computes the same generalized peeling step,
+only the reduction is distributed.
+
+Capacity growth stays a host-side reallocation; edge *insertion* is a
+device-side sharded scatter: the batch is replicated, each shard claims
+the global slot range it owns (``edge_count`` is a replicated scalar) and
+writes only the batch entries that land in its block.
+
+Entry points mirror the single-device engine one-for-one:
+
+=============================  ========================================
+single device                  sharded (``mesh=``, ``axis=``)
+=============================  ========================================
+``bulk_peel``                  ``sharded_bulk_peel``
+``bulk_peel_warm``             ``sharded_bulk_peel_warm``
+``DeviceGraph.peel_weights``   ``sharded_peel_weights``
+``init_state``                 ``init_sharded_state``
+``insert_and_maintain``        ``sharded_insert_and_maintain``
+``full_refresh``               ``sharded_full_refresh``
+=============================  ========================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.incremental import _LEVEL_NEW, DeviceSpadeState
+from repro.core.peel import PeelResultDevice, _run_rounds
+from repro.graphstore.structs import DeviceGraph, compact_slots
+
+__all__ = [
+    "shard_graph",
+    "sharded_peel_weights",
+    "sharded_bulk_peel",
+    "sharded_bulk_peel_warm",
+    "init_sharded_state",
+    "sharded_insert_and_maintain",
+    "sharded_full_refresh",
+]
+
+_INF = jnp.float32(jnp.inf)
+
+
+def _check_divisible(g: DeviceGraph, mesh: Mesh, axis: str) -> int:
+    n_shards = mesh.shape[axis]
+    if g.e_capacity % n_shards:
+        raise ValueError(
+            f"e_capacity={g.e_capacity} not divisible by mesh axis "
+            f"{axis!r} ({n_shards} shards); use shard_graph() to pad+place"
+        )
+    return n_shards
+
+
+def shard_graph(g: DeviceGraph, mesh: Mesh, axis: str = "data") -> DeviceGraph:
+    """Pad ``e_capacity`` to a multiple of the shard count and place the
+    graph: edge buffers block-sharded along ``axis``, vertex buffers
+    replicated.  Padding slots are the standard inert self-loops
+    (``src = dst = n_capacity - 1``, ``c = 0``, mask False) appended at
+    the tail, after the free region the edge counter grows into."""
+    n_shards = mesh.shape[axis]
+    e_pad = -(-g.e_capacity // n_shards) * n_shards
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    c, em = np.asarray(g.c), np.asarray(g.edge_mask)
+    if e_pad != g.e_capacity:
+        extra = e_pad - g.e_capacity
+        pad_idx = np.full(extra, g.n_capacity - 1, np.int32)
+        src = np.concatenate([src, pad_idx])
+        dst = np.concatenate([dst, pad_idx])
+        c = np.concatenate([c, np.zeros(extra, np.float32)])
+        em = np.concatenate([em, np.zeros(extra, bool)])
+    esh = NamedSharding(mesh, P(axis))
+    vsh = NamedSharding(mesh, P())
+    # vertex arrays round-trip through host: device_put of a live device
+    # array can alias its buffer into the replicated copy, which a later
+    # donation of the source graph would silently delete
+    return DeviceGraph(
+        src=jax.device_put(jnp.asarray(src), esh),
+        dst=jax.device_put(jnp.asarray(dst), esh),
+        c=jax.device_put(jnp.asarray(c), esh),
+        edge_mask=jax.device_put(jnp.asarray(em), esh),
+        a=jax.device_put(jnp.asarray(np.asarray(g.a)), vsh),
+        vertex_mask=jax.device_put(jnp.asarray(np.asarray(g.vertex_mask)), vsh),
+        n_capacity=g.n_capacity,
+        e_capacity=e_pad,
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharded peel rounds (runs inside shard_map; one fused psum per round)
+# ---------------------------------------------------------------------------
+
+
+class _ShardState(NamedTuple):
+    w: jax.Array  # [V] replicated
+    active: jax.Array  # [V] replicated
+    edge_alive: jax.Array  # [E/n_shards] LOCAL
+    f: jax.Array
+    n_act: jax.Array
+    level: jax.Array
+    best_g: jax.Array
+    best_level: jax.Array
+    round_: jax.Array
+
+
+def _local_peel_fn(axis: str, V: int, eps: float, max_rounds: int, warm: bool):
+    """Build the per-shard peel body.  ``warm`` restricts to the ``keep``
+    suffix exactly like :func:`repro.core.peel.bulk_peel_warm`; cold start
+    mirrors ``bulk_peel`` (same init, best tracker seeded by prior_g)."""
+
+    def fn(src, dst, c, emask, a, vmask, keep, prior_g):
+        if warm:
+            live = keep & vmask
+            alive0 = live[src] & live[dst] & emask
+            w_base = jnp.where(live, a, 0.0)
+        else:
+            live = vmask
+            alive0 = emask
+            w_base = jnp.where(vmask, a, 0.0)
+        cm0 = jnp.where(alive0, c, 0.0)
+        inc = jax.ops.segment_sum(cm0, src, num_segments=V) + jax.ops.segment_sum(
+            cm0, dst, num_segments=V
+        )
+        inc, e_sum = jax.lax.psum((inc, jnp.sum(cm0)), axis)
+        init = _ShardState(
+            w=w_base + inc,
+            active=live,
+            edge_alive=alive0,
+            f=jnp.sum(w_base) + e_sum,
+            n_act=jnp.sum(live),
+            level=jnp.full(V, -1, jnp.int32),
+            best_g=prior_g.astype(jnp.float32),
+            best_level=jnp.int32(0),
+            round_=jnp.int32(0),
+        )
+
+        def round_fn(s: _ShardState) -> _ShardState:
+            g_cur = s.f / jnp.maximum(s.n_act, 1).astype(jnp.float32)
+            improved = (g_cur > s.best_g) & (s.n_act > 0)
+            best_g = jnp.where(improved, g_cur, s.best_g)
+            best_level = jnp.where(improved, s.round_, s.best_level)
+            thresh = 2.0 * (1.0 + eps) * g_cur
+            peel = s.active & (s.w <= thresh)
+            e_ps = peel[src]
+            e_pd = peel[dst]
+            cm = jnp.where(s.edge_alive, c, 0.0)
+            dw_l = jax.ops.segment_sum(
+                jnp.where(e_ps & ~e_pd, cm, 0.0), dst, num_segments=V
+            ) + jax.ops.segment_sum(
+                jnp.where(e_pd & ~e_ps, cm, 0.0), src, num_segments=V
+            )
+            drop_l = jnp.sum(jnp.where(e_ps | e_pd, cm, 0.0))
+            dw, drop = jax.lax.psum((dw_l, drop_l), axis)
+            return _ShardState(
+                w=s.w - dw,
+                active=s.active & ~peel,
+                edge_alive=s.edge_alive & ~(e_ps | e_pd),
+                f=s.f - jnp.sum(jnp.where(peel, a, 0.0)) - drop,
+                n_act=s.n_act - jnp.sum(peel),
+                level=jnp.where(peel, s.round_, s.level),
+                best_g=best_g,
+                best_level=best_level,
+                round_=s.round_ + 1,
+            )
+
+        s = _run_rounds(round_fn, init, max_rounds)
+        return s.level, s.best_level, s.best_g, s.round_, s.w
+
+    return fn
+
+
+def _sharded_peel(
+    g: DeviceGraph,
+    keep: jax.Array,
+    prior_g: jax.Array,
+    mesh: Mesh,
+    axis: str,
+    eps: float,
+    max_rounds: int,
+    warm: bool,
+) -> PeelResultDevice:
+    _check_divisible(g, mesh, axis)
+    es, rs = P(axis), P()
+    fn = _local_peel_fn(axis, g.n_capacity, eps, max_rounds, warm)
+    level, best_level, best_g, n_rounds, w = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(es, es, es, es, rs, rs, rs, rs),
+        out_specs=(rs,) * 5,
+        check_rep=False,
+    )(g.src, g.dst, g.c, g.edge_mask, g.a, g.vertex_mask, keep, prior_g)
+    return PeelResultDevice(
+        level=level,
+        best_level=best_level,
+        best_g=best_g,
+        n_rounds=n_rounds,
+        order=jnp.zeros(g.n_capacity, jnp.int32),
+        delta=w,
+    )
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "eps", "max_rounds"))
+def sharded_bulk_peel(
+    g: DeviceGraph,
+    mesh: Mesh,
+    axis: str = "data",
+    eps: float = 0.1,
+    max_rounds: int = 0,
+) -> PeelResultDevice:
+    """Edge-sharded twin of :func:`repro.core.peel.bulk_peel`."""
+    return _sharded_peel(
+        g, g.vertex_mask, -_INF, mesh, axis, eps, max_rounds, warm=False
+    )
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "eps", "max_rounds"))
+def sharded_bulk_peel_warm(
+    g: DeviceGraph,
+    keep: jax.Array,
+    prior_best_g: jax.Array,
+    mesh: Mesh,
+    axis: str = "data",
+    eps: float = 0.1,
+    max_rounds: int = 0,
+) -> PeelResultDevice:
+    """Edge-sharded twin of :func:`repro.core.peel.bulk_peel_warm`."""
+    return _sharded_peel(
+        g, keep, prior_best_g, mesh, axis, eps, max_rounds, warm=True
+    )
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis"))
+def sharded_peel_weights(g: DeviceGraph, mesh: Mesh, axis: str = "data") -> jax.Array:
+    """Edge-sharded ``DeviceGraph.peel_weights`` (one psum)."""
+    _check_divisible(g, mesh, axis)
+    V = g.n_capacity
+
+    def fn(src, dst, c, emask, a, vmask):
+        cm = jnp.where(emask, c, 0.0)
+        inc = jax.ops.segment_sum(cm, src, num_segments=V) + jax.ops.segment_sum(
+            cm, dst, num_segments=V
+        )
+        return jnp.where(vmask, a, 0.0) + jax.lax.psum(inc, axis)
+
+    es, rs = P(axis), P()
+    return shard_map(
+        fn, mesh=mesh, in_specs=(es, es, es, es, rs, rs), out_specs=rs,
+        check_rep=False,
+    )(g.src, g.dst, g.c, g.edge_mask, g.a, g.vertex_mask)
+
+
+# ---------------------------------------------------------------------------
+# sharded streaming maintenance
+# ---------------------------------------------------------------------------
+
+
+def init_sharded_state(
+    g: DeviceGraph, mesh: Mesh, axis: str = "data", eps: float = 0.1
+) -> DeviceSpadeState:
+    """Sharded twin of :func:`repro.core.incremental.init_state`; ``g``
+    should come from :func:`shard_graph`."""
+    res = sharded_bulk_peel(g, mesh, axis=axis, eps=eps)
+    return DeviceSpadeState(
+        graph=g,
+        level=res.level,
+        best_g=res.best_g,
+        community=res.community_mask() & g.vertex_mask,
+        edge_count=jnp.sum(g.edge_mask).astype(jnp.int32),
+        w0=sharded_peel_weights(g, mesh, axis=axis),
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "eps", "max_rounds"),
+    donate_argnames=("state",),
+)
+def sharded_insert_and_maintain(
+    state: DeviceSpadeState,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    mesh: Mesh,
+    axis: str = "data",
+    eps: float = 0.1,
+    max_rounds: int = 0,
+) -> DeviceSpadeState:
+    """Edge-sharded twin of :func:`repro.core.incremental.insert_and_maintain`.
+
+    One fused device program: sharded append (each shard writes the batch
+    entries whose global slot falls in its block) -> affected-suffix
+    recovery (replicated) -> sharded warm bulk re-peel -> state merge.
+    """
+    g = state.graph
+    n_shards = _check_divisible(g, mesh, axis)
+    e_local = g.e_capacity // n_shards
+    B = src.shape[0]
+
+    def append_local(ls, ld, lc, lm, bs, bd, bc, valid_b, offset):
+        lo = jax.lax.axis_index(axis).astype(jnp.int32) * e_local
+        idx, ok = compact_slots(offset, valid_b, g.e_capacity)
+        li = idx - lo
+        li = jnp.where(ok & (li >= 0) & (li < e_local), li, e_local)
+        return (
+            ls.at[li].set(bs.astype(jnp.int32), mode="drop"),
+            ld.at[li].set(bd.astype(jnp.int32), mode="drop"),
+            lc.at[li].set(bc.astype(jnp.float32), mode="drop"),
+            lm.at[li].set(True, mode="drop"),
+        )
+
+    es, rs = P(axis), P()
+    nsrc, ndst, nc, nmask = shard_map(
+        append_local,
+        mesh=mesh,
+        in_specs=(es, es, es, es, rs, rs, rs, rs, rs),
+        out_specs=(es,) * 4,
+        check_rep=False,
+    )(g.src, g.dst, g.c, g.edge_mask, src, dst, c, valid, state.edge_count)
+    g = dataclasses.replace(g, src=nsrc, dst=ndst, c=nc, edge_mask=nmask)
+    n_new = jnp.sum(valid).astype(jnp.int32)
+
+    # affected suffix start (replicated math — level/batch are replicated)
+    lvl_src = jnp.where(valid, state.level[src], _LEVEL_NEW)
+    lvl_dst = jnp.where(valid, state.level[dst], _LEVEL_NEW)
+    r0 = jnp.minimum(jnp.min(lvl_src), jnp.min(lvl_dst))
+    r0 = jnp.where(n_new > 0, r0, _LEVEL_NEW)
+    r0 = jnp.minimum(r0, jnp.int32(2**30))
+    keep = state.level >= r0
+
+    res = _sharded_peel(
+        g, keep, state.best_g, mesh, axis, eps, max_rounds, warm=True
+    )
+
+    suffix_level = jnp.where(res.level >= 0, res.level, res.n_rounds)
+    new_level = jnp.where(keep, r0 + suffix_level, state.level)
+    improved = res.best_g > state.best_g
+    new_comm = jnp.where(
+        improved,
+        (res.level >= res.best_level) & keep & g.vertex_mask,
+        state.community,
+    )
+    w0 = state.w0
+    cv = jnp.where(valid, c.astype(jnp.float32), 0.0)
+    w0 = w0.at[src].add(cv, mode="drop")
+    w0 = w0.at[dst].add(cv, mode="drop")
+    return DeviceSpadeState(
+        graph=g,
+        level=new_level,
+        best_g=jnp.maximum(res.best_g, state.best_g),
+        community=new_comm,
+        edge_count=state.edge_count + n_new,
+        w0=w0,
+    )
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "eps"))
+def sharded_full_refresh(
+    state: DeviceSpadeState, mesh: Mesh, axis: str = "data", eps: float = 0.1
+) -> DeviceSpadeState:
+    """Edge-sharded twin of :func:`repro.core.incremental.full_refresh`."""
+    res = sharded_bulk_peel(state.graph, mesh, axis=axis, eps=eps)
+    return DeviceSpadeState(
+        graph=state.graph,
+        level=res.level,
+        best_g=res.best_g,
+        community=res.community_mask() & state.graph.vertex_mask,
+        edge_count=state.edge_count,
+        w0=sharded_peel_weights(state.graph, mesh, axis=axis),
+    )

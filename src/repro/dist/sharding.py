@@ -1,0 +1,158 @@
+"""Logical-axis sharding layer: the dist plane's naming contract.
+
+Model and engine code annotates arrays with *logical* axis names
+("batch", "edges", "model", ...) and stays mesh-agnostic.  An
+:class:`AxisEnv` installed around jit lowering (``use_axis_env``) maps
+logical names onto whatever physical mesh axes actually exist; outside
+any env — unit tests, a single device — every annotation is a no-op, so
+the same model code runs unmodified from a laptop to a multi-pod mesh.
+
+Resolution drops mesh axes that are absent from the current mesh (e.g.
+``"batch" -> ("pod", "data")`` becomes plain ``"data"`` on a single-pod
+mesh), and :func:`constrain` additionally drops a constraint whose dim
+is not divisible by the resolved axis sizes, so smoke-scale shapes lower
+cleanly under a production-shaped mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from contextlib import contextmanager
+from typing import Any, Iterator, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "AxisEnv",
+    "use_axis_env",
+    "axis_env",
+    "constrain",
+    "tree_shardings",
+]
+
+# logical axis -> mesh axes that may carry it, in order; axes absent from
+# the active mesh drop out at resolution time.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),  # pure data parallelism (DCN-friendly)
+    "fsdp": ("data",),  # param/optimizer shards within a pod
+    "model": ("model",),  # tensor parallelism
+    "expert": ("model",),  # expert parallelism rides the model axis
+    "seq": ("model",),  # sequence-sharded serving attention
+    "vertex": ("model",),  # GNN vertex arrays
+    "edges": ("pod", "data"),  # COO edge buffers (spade + GNN)
+    "rows": ("data", "model"),  # embedding-table rows
+    "data": ("data",),  # escape hatch: name the mesh axis directly
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisEnv:
+    """A mesh plus the logical->mesh-axis rule table.
+
+    ``rules`` entries are merged over :data:`DEFAULT_RULES`; map a logical
+    name to ``()`` to force replication of that axis.
+    """
+
+    mesh: Mesh | None = None
+    rules: Mapping[str, Sequence[str]] | None = None
+
+    def rule(self, logical: str) -> tuple[str, ...]:
+        if self.rules is not None and logical in self.rules:
+            return tuple(self.rules[logical])
+        try:
+            return DEFAULT_RULES[logical]
+        except KeyError:
+            raise KeyError(
+                f"unknown logical axis {logical!r}; known: "
+                f"{sorted(set(DEFAULT_RULES) | set(self.rules or ()))}"
+            ) from None
+
+    def resolve(self, logical: str | None) -> str | tuple[str, ...] | None:
+        """Mesh axes carrying ``logical`` on this mesh (None if none do)."""
+        if logical is None or self.mesh is None:
+            return None
+        axes = tuple(a for a in self.rule(logical) if a in self.mesh.shape)
+        if not axes:
+            return None
+        return axes[0] if len(axes) == 1 else axes
+
+    def axis_size(self, logical: str | None) -> int:
+        """Total number of shards ``logical`` resolves to (1 if replicated)."""
+        ax = self.resolve(logical)
+        if ax is None:
+            return 1
+        axes = (ax,) if isinstance(ax, str) else ax
+        return math.prod(self.mesh.shape[a] for a in axes)
+
+    def spec(self, *logical: str | None) -> P:
+        return P(*(self.resolve(l) for l in logical))
+
+    def sharding(self, *logical: str | None) -> NamedSharding:
+        if self.mesh is None:
+            raise ValueError("AxisEnv has no mesh; cannot build a NamedSharding")
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+_STACK: list[AxisEnv] = []
+
+
+def axis_env() -> AxisEnv | None:
+    """The innermost active AxisEnv, or None outside any ``use_axis_env``."""
+    return _STACK[-1] if _STACK else None
+
+
+@contextmanager
+def use_axis_env(env: AxisEnv) -> Iterator[AxisEnv]:
+    _STACK.append(env)
+    try:
+        yield env
+    finally:
+        _STACK.pop()
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Annotate ``x`` with logical axes (one per dim, None = unconstrained).
+
+    Lowers to ``jax.lax.with_sharding_constraint`` under an active mesh
+    env; a no-op otherwise.  Dims not divisible by the resolved shard
+    count keep their data but lose the constraint (replicated).
+    """
+    env = axis_env()
+    if env is None or env.mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(
+            f"constrain got {len(logical)} logical axes for rank-{x.ndim} array"
+        )
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        ax = env.resolve(name)
+        if ax is not None and dim % env.axis_size(name) != 0:
+            ax = None
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(env.mesh, P(*spec)))
+
+
+def _is_logical_leaf(node: Any) -> bool:
+    """A tuple of logical names / Nones (possibly empty -> scalar)."""
+    return isinstance(node, tuple) and all(
+        isinstance(e, (str, type(None))) for e in node
+    )
+
+
+def tree_shardings(logical_tree: Any, env: AxisEnv | None = None) -> Any:
+    """Map a pytree of logical-axis tuples to a matching NamedSharding tree.
+
+    Leaves are tuples like ``("batch", None)`` (``()`` for scalars); the
+    result plugs straight into ``jax.jit(in_shardings=...)``.
+    """
+    env = env if env is not None else axis_env()
+    if env is None or env.mesh is None:
+        raise ValueError("tree_shardings requires an active AxisEnv with a mesh "
+                         "(wrap the call in use_axis_env)")
+    return jax.tree.map(
+        lambda leaf: env.sharding(*leaf), logical_tree, is_leaf=_is_logical_leaf
+    )

@@ -18,7 +18,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["DeviceGraph", "device_graph_from_coo", "append_edges", "csr_sort"]
+__all__ = ["DeviceGraph", "device_graph_from_coo", "compact_slots",
+           "append_edges", "csr_sort"]
+
+
+def compact_slots(
+    offset: jax.Array, valid: jax.Array, capacity: int
+) -> tuple[jax.Array, jax.Array]:
+    """Compacted append slots: the k-th valid lane gets ``offset + k``.
+
+    Returns ``(idx, ok)``; lanes with ``~ok`` (invalid, or past capacity)
+    must be dropped by the caller.  Shared by the single-device and the
+    edge-sharded append so their slot semantics cannot diverge.
+    """
+    slot = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    idx = offset + slot
+    return idx, valid & (idx < capacity)
 
 
 @partial(
@@ -112,17 +127,19 @@ def append_edges(
     c: jax.Array,
     valid: jax.Array | None = None,
 ) -> DeviceGraph:
-    """Write a batch of edges into slots [offset, offset+B) (device-side).
+    """Write a batch of edges into consecutive slots from ``offset``.
 
     ``offset`` is the current edge count (host-tracked or device scalar);
-    batch size B is static.  Out-of-capacity writes are dropped (callers
-    reallocate on host when the high-water mark approaches capacity).
+    batch size B is static.  Valid entries are *compacted*: the k-th valid
+    edge lands in slot ``offset + k``, so the slot range consumed always
+    equals ``sum(valid)`` — the amount callers advance their edge counter
+    by — even when invalid entries sit between valid ones.  Out-of-capacity
+    writes are dropped (callers reallocate on host when the high-water mark
+    approaches capacity).
     """
     B = src.shape[0]
-    idx = offset + jnp.arange(B, dtype=jnp.int32)
-    ok = idx < g.e_capacity
-    if valid is not None:
-        ok = ok & valid
+    v = jnp.ones(B, bool) if valid is None else valid
+    idx, ok = compact_slots(offset, v, g.e_capacity)
     # dropped writes go out of bounds and are discarded by mode='drop'
     idx = jnp.where(ok, idx, g.e_capacity)
     return dataclasses.replace(

@@ -117,6 +117,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, verbose: bool = True,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # older jax: [dict]
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
             coll = collective_bytes(hlo)
         n_chips = int(np.prod(mesh.devices.shape))

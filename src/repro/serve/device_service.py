@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +26,12 @@ from repro.core.incremental import (
     full_refresh,
     init_state,
     insert_and_maintain,
+)
+from repro.dist.graph import (
+    init_sharded_state,
+    shard_graph,
+    sharded_full_refresh,
+    sharded_insert_and_maintain,
 )
 from repro.graphstore.generators import TxStream
 from repro.graphstore.structs import device_graph_from_coo
@@ -52,8 +59,16 @@ def run_device_service(
     max_rounds: int = 20,
     refresh_every: int = 0,
     capacity_slack: float = 1.3,
+    mesh: jax.sharding.Mesh | None = None,
+    shard_axis: str = "data",
 ) -> DeviceServiceReport:
-    """Replay ``stream`` through the device engine in fixed-size ticks."""
+    """Replay ``stream`` through the device engine in fixed-size ticks.
+
+    With ``mesh=`` the edge buffers are block-sharded along ``shard_axis``
+    (vertex state replicated) and every tick runs the dist plane's
+    psum-reduced engine (:mod:`repro.dist.graph`); without it, the
+    single-device engine.  Results are identical up to reduction-order
+    rounding."""
     n = stream.n_vertices
     m_base = stream.base_src.shape[0]
     m_total = m_base + stream.inc_src.shape[0]
@@ -72,7 +87,15 @@ def run_device_service(
         n, stream.base_src, stream.base_dst, base_w,
         n_capacity=-(-n // 512) * 512, e_capacity=-(-e_cap // 512) * 512,
     )
-    state = init_state(g, eps=eps)
+    if mesh is not None:
+        g = shard_graph(g, mesh, axis=shard_axis)
+        state = init_sharded_state(g, mesh, axis=shard_axis, eps=eps)
+        maintain = partial(sharded_insert_and_maintain, mesh=mesh, axis=shard_axis)
+        refresh = partial(sharded_full_refresh, mesh=mesh, axis=shard_axis)
+    else:
+        state = init_state(g, eps=eps)
+        maintain = insert_and_maintain
+        refresh = full_refresh
     deg_dev = jnp.zeros(g.n_capacity, jnp.int32).at[
         jnp.asarray(stream.base_dst)
     ].add(1)
@@ -98,9 +121,10 @@ def run_device_service(
             w = dg_weights(jnp.asarray(amt, jnp.float32))
         else:
             w = dw_weights(jnp.asarray(amt, jnp.float32))
-        benign_total += int(benign_mask(state, bs_d, bd_d, w).sum())
+        # padded tail lanes of a partial tick must not count toward stats
+        benign_total += int(np.asarray(benign_mask(state, bs_d, bd_d, w))[valid].sum())
         t0 = time.perf_counter()
-        state = insert_and_maintain(
+        state = maintain(
             state, bs_d, bd_d, w.astype(jnp.float32), valid_d,
             eps=eps, max_rounds=max_rounds,
         )
@@ -108,7 +132,7 @@ def run_device_service(
         t_total += time.perf_counter() - t0
         n_ticks += 1
         if refresh_every and n_ticks % refresh_every == 0:
-            state = full_refresh(state, eps=eps)
+            state = refresh(state, eps=eps)
             n_refresh += 1
 
     comm = set(np.where(np.asarray(state.community))[0].tolist())

@@ -1,0 +1,36 @@
+"""Fallback when ``hypothesis`` is absent from the environment: strategy
+construction becomes inert and ``@given`` tests skip, so the rest of the
+module still runs."""
+
+import pytest
+
+
+class _AnyStrategy:
+    """Absorbs any attribute access / call / chaining (st.lists(...).filter)."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+st = _AnyStrategy()
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        # must stay a plain named function or pytest drops it from
+        # collection instead of reporting a skip
+        def _skipped():
+            pytest.skip("hypothesis not installed")
+
+        _skipped.__name__ = fn.__name__
+        _skipped.__doc__ = fn.__doc__
+        return _skipped
+
+    return deco

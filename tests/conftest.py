@@ -1,0 +1,13 @@
+"""Force 8 XLA host devices so the sharded (dist) paths are exercised.
+
+Must run before jax initializes its backend; conftest import happens
+during collection, ahead of every test module.
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")
+    ).strip()

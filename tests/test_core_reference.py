@@ -13,7 +13,10 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container may lack hypothesis; property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.reference import (
     AdjGraph,

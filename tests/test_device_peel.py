@@ -200,3 +200,99 @@ def test_empty_batch_noop():
     )
     assert int(state2.edge_count) == m_real
     np.testing.assert_array_equal(np.asarray(state2.level), lvl0)
+
+
+# ---------------------------------------------------------------------------
+# benign/urgent routing: device benign_mask == host oracle Def 4.1
+# ---------------------------------------------------------------------------
+
+
+def test_benign_mask_matches_host_urgency_stream():
+    """Edge-by-edge over a random stream, the vectorized benign_mask agrees
+    with the host oracle's Def 4.1 urgency test.
+
+    Both tests read the same exact g(S^P) (host-maintained), so the
+    comparison isolates the device plane's incrementally maintained w0 and
+    the vectorized test itself; integer weights keep every sum exact."""
+    import dataclasses
+
+    from repro.core.reference import insert_edges, peeling_weights_full
+
+    rng = np.random.default_rng(5)
+    n, m = 30, 60
+    src, dst, c, a = random_coo(rng, n, m)
+    # plant a heavy block so g(S^P) is high and sparse-endpoint edges are
+    # genuinely benign — both branches of Def 4.1 get exercised
+    block = np.arange(6)
+    bs_, bd_ = np.meshgrid(block, block)
+    tri = bs_ < bd_
+    src = np.concatenate([src, bs_[tri]])
+    dst = np.concatenate([dst, bd_[tri]])
+    c = np.concatenate([c, np.full(tri.sum(), 40.0, np.float32)])
+    g_dev = device_graph_from_coo(n, src, dst, c, a, e_capacity=src.shape[0] + 128)
+    state = init_state(g_dev, eps=0.1)
+    host = to_oracle(n, src, dst, c, a)
+    host_state = static_peel(host)
+    _, g_best = detect(host_state)
+    w0_host = peeling_weights_full(host)
+    np.testing.assert_allclose(np.asarray(state.w0)[:n], w0_host, rtol=1e-6)
+
+    checked_benign = checked_urgent = 0
+    for _ in range(40):
+        u, v = (int(x) for x in rng.integers(0, n, 2))
+        if u == v:
+            continue
+        cv = float(rng.integers(1, 5))
+        host_urgent = (w0_host[u] + cv >= g_best) or (w0_host[v] + cv >= g_best)
+        dev = dataclasses.replace(state, best_g=jnp.float32(g_best))
+        dev_benign = bool(
+            benign_mask(
+                dev,
+                jnp.asarray([u], jnp.int32),
+                jnp.asarray([v], jnp.int32),
+                jnp.asarray([cv], jnp.float32),
+            )[0]
+        )
+        assert dev_benign == (not host_urgent), (u, v, cv)
+        checked_benign += dev_benign
+        checked_urgent += not dev_benign
+        # apply the edge on both planes, then re-check w0 parity
+        insert_edges(host_state, [(u, v, cv)])
+        w0_host[u] += cv
+        w0_host[v] += cv
+        _, g_best = detect(host_state)
+        state = insert_and_maintain(
+            state,
+            jnp.asarray([u], jnp.int32),
+            jnp.asarray([v], jnp.int32),
+            jnp.asarray([cv], jnp.float32),
+            jnp.asarray([True]),
+            eps=0.1,
+        )
+        np.testing.assert_allclose(np.asarray(state.w0)[:n], w0_host, rtol=1e-6)
+    assert checked_benign > 0 and checked_urgent > 0  # both branches exercised
+
+
+def test_append_compacts_interior_invalid_batch_entries():
+    """Regression: the k-th *valid* edge of a batch must land in slot
+    offset+k, or a later batch (offset advanced by sum(valid)) silently
+    overwrites earlier edges when invalid entries sit between valid ones."""
+    g = device_graph_from_coo(
+        6, np.array([0]), np.array([1]), np.ones(1, np.float32), e_capacity=8
+    )
+    state = init_state(g, eps=0.1)
+    s1 = insert_and_maintain(
+        state,
+        jnp.asarray([0, 3], jnp.int32), jnp.asarray([0, 4], jnp.int32),
+        jnp.ones(2, jnp.float32), jnp.asarray([False, True]), eps=0.1,
+    )
+    s2 = insert_and_maintain(
+        s1,
+        jnp.asarray([4, 2], jnp.int32), jnp.asarray([5, 5], jnp.int32),
+        jnp.ones(2, jnp.float32), jnp.asarray([True, True]), eps=0.1,
+    )
+    em = np.asarray(s2.graph.edge_mask)
+    edges = set(zip(np.asarray(s2.graph.src)[em].tolist(),
+                    np.asarray(s2.graph.dst)[em].tolist()))
+    assert edges == {(0, 1), (3, 4), (4, 5), (2, 5)}
+    assert int(s2.edge_count) == 4
