@@ -7,6 +7,9 @@ container; the paper's claims are *ratios*, which transfer):
 * ``bench_prevention``          — Fig 9a / §5.2: prevention ratio & latency.
 * ``bench_device_plane``        — TPU-native plane: bulk peel + incremental
   maintenance wall-times (CPU backend; ratios again).
+* ``bench_window``              — Appendix C.3 sliding-window serving:
+  steady-state warm tick (expire + insert suffix re-peels) vs a full
+  from-scratch bulk re-peel per tick; emits ``BENCH_window.json``.
 
 Every row prints ``name,us_per_call,derived`` CSV (derived = speedup /
 ratio / aux metric for that row).
@@ -151,6 +154,119 @@ def bench_device_plane(seed=3) -> list[Row]:
     jax.block_until_ready(state.best_g)
     t_inc = (time.perf_counter() - t0) / reps
     rows.append(("device_incremental_1024", t_inc * 1e6, t_inc / B * 1e6))
+    return rows
+
+
+def bench_window(
+    n=100_000,
+    m=400_000,
+    batch=1024,
+    window=8,
+    seed=4,
+    out_json="BENCH_window.json",
+) -> list[Row]:
+    """Sliding-window serving (paper Appendix C.3, device plane): the fused
+    warm tick (``slide_and_maintain``: expire + insert + one suffix
+    re-peel) vs the naive alternative of a full from-scratch bulk re-peel
+    per tick, in two traffic regimes:
+
+    * **cold** — uniform random endpoints: some endpoint almost surely
+      peeled in round 0, so ``r0 = 0`` and the warm tick degenerates to a
+      full re-peel plus compaction overhead (the honest worst case).
+    * **hot**  — the paper's fraud-burst case study: traffic concentrated
+      on the currently-densest vertices (high peel level), so the
+      re-peeled suffix is small and the warm tick wins on round count.
+
+    Writes ``out_json`` so the perf trajectory is recorded per commit."""
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.incremental import init_state, slide_and_maintain
+    from repro.core.peel import bulk_peel
+    from repro.graphstore.structs import device_graph_from_coo
+
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    m_base = int(keep.sum())
+
+    def fresh_state():
+        g = device_graph_from_coo(
+            n, src[keep], dst[keep], np.ones(m_base, np.float32),
+            e_capacity=m_base + (window + 1) * batch,
+        )
+        return init_state(g, eps=0.1)
+
+    def run_regime(hot_pool):
+        state = fresh_state()
+        slot_ids = jnp.arange(state.graph.e_capacity, dtype=jnp.int32)
+        ring: list[int] = []
+
+        def make_batch():
+            if hot_pool is None:
+                bs = rng.integers(0, n, batch)
+                bd = rng.integers(0, n, batch)
+            else:
+                bs = rng.choice(hot_pool, batch)
+                bd = rng.choice(hot_pool, batch)
+            bs = jnp.asarray(bs, jnp.int32)
+            bd = jnp.asarray(bd, jnp.int32)
+            return bs, bd, jnp.ones(batch, jnp.float32), bs != bd
+
+        def tick(state):
+            cnt0 = ring.pop(0) if len(ring) >= window else 0
+            drop = (slot_ids >= m_base) & (slot_ids < m_base + cnt0)
+            bs, bd, bc, valid = make_batch()
+            state = slide_and_maintain(state, drop, bs, bd, bc, valid, eps=0.1)
+            ring.append(int(jnp.sum(valid)))
+            return state
+
+        for _ in range(window + 1):  # fill the window + warm compile caches
+            state = tick(state)
+        jax.block_until_ready(state.best_g)
+        reps = 5
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            state = tick(state)
+        jax.block_until_ready(state.best_g)
+        return (time.perf_counter() - t0) / reps, state
+
+    # hot pool: the vertices the last peel removed in the final rounds
+    probe = fresh_state()
+    lv = np.asarray(probe.level)
+    lv = np.where(np.asarray(probe.graph.vertex_mask), lv, -1)
+    hot_pool = np.argsort(lv)[-max(batch // 2, 64):]
+
+    t_cold, state = run_regime(None)
+    t_hot, _ = run_regime(hot_pool)
+
+    # naive alternative: full bulk re-peel of the resident graph per tick
+    res = jax.block_until_ready(bulk_peel(state.graph, eps=0.1))  # compile
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = bulk_peel(state.graph, eps=0.1)
+    jax.block_until_ready(res.best_g)
+    t_scratch = (time.perf_counter() - t0) / reps
+
+    rows: list[Row] = [
+        ("window_slide_tick_cold", t_cold * 1e6, t_scratch / max(t_cold, 1e-9)),
+        ("window_slide_tick_hot", t_hot * 1e6, t_scratch / max(t_hot, 1e-9)),
+        ("window_full_repeel", t_scratch * 1e6, float(res.n_rounds)),
+    ]
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(
+                {
+                    "n": int(n), "m": int(m), "batch": int(batch),
+                    "window": int(window),
+                    "rows": {r[0]: {"us": r[1], "derived": r[2]} for r in rows},
+                },
+                f, indent=1,
+            )
     return rows
 
 

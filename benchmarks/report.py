@@ -86,7 +86,7 @@ def roofline_section(rf: dict) -> list[str]:
     lines = [
         "## §Roofline (deliverable g) — single-pod (256 x v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)",
         "",
-        "Terms from trip-count-exact lowerings (unrolled / secant-depth; DESIGN.md §6).",
+        "Terms from trip-count-exact lowerings (unrolled / secant-depth; DESIGN.md §7).",
         "`useful` = MODEL_FLOPS / (HLO FLOPs x chips); < 1 exposes remat/dispatch",
         "overhead, > would flag undercounting. Memory bytes come from XLA's",
         "`bytes accessed` on the CPU-compiled module, which counts unfused",

@@ -2,7 +2,7 @@
 the three roofline terms from compiled artifacts with *exact trip-count
 accounting* and emit the table consumed by EXPERIMENTS.md.
 
-Method (DESIGN.md §6): XLA ``cost_analysis`` counts while-loop bodies once,
+Method (DESIGN.md §7): XLA ``cost_analysis`` counts while-loop bodies once,
 so production (scan-over-layers) lowerings under-report.  The harness
 therefore lowers *unrolled* analysis variants; for deep LMs it uses the
 **secant-depth method** — lower unrolled depth-2 and depth-4 variants,

@@ -41,6 +41,7 @@ def main() -> None:
             bench_edge_grouping,
             bench_incremental_speedup,
             bench_prevention,
+            bench_window,
         )
 
         kw = dict(n=4000, m=20000, n_inc=600) if args.quick else {}
@@ -48,6 +49,8 @@ def main() -> None:
         rows += bench_edge_grouping(**({"n": 4000, "m": 20000, "n_inc": 600} if args.quick else {}))
         rows += bench_prevention()
         rows += bench_device_plane()
+        wkw = dict(n=20_000, m=80_000, batch=512, window=4) if args.quick else {}
+        rows += bench_window(**wkw)
         # sharded rows run in a subprocess: the forced multi-device
         # topology must not contaminate the legacy single-device rows
         # (this backend is already initialized single-device by now)

@@ -31,12 +31,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.peel import PeelResultDevice, bulk_peel, bulk_peel_warm
-from repro.graphstore.structs import DeviceGraph, append_edges
+from repro.graphstore.structs import DeviceGraph, append_edges, remove_edges
 
 __all__ = [
     "DeviceSpadeState",
     "init_state",
     "insert_and_maintain",
+    "delete_and_maintain",
+    "slide_and_maintain",
     "full_refresh",
     "benign_mask",
 ]
@@ -139,6 +141,157 @@ def insert_and_maintain(
         edge_count=state.edge_count + n_new,
         w0=w0,
     )
+
+
+class _SlideBookkeeping(NamedTuple):
+    """Replicated pre-re-peel bookkeeping shared by the single-device and
+    the mesh-sharded window-slide paths (one definition so the two engines
+    cannot drift — the same role ``compact_slots`` plays for appends)."""
+
+    dropped: jax.Array  # [E] live slots being expired
+    cd: jax.Array  # [E] expired suspiciousness (0 elsewhere)
+    n_new: jax.Array
+    r0: jax.Array
+    keep: jax.Array
+    prior_g: jax.Array
+
+
+def _slide_prologue(
+    state: DeviceSpadeState, drop: jax.Array, src, dst, valid
+) -> _SlideBookkeeping:
+    g0 = state.graph
+    dropped = drop & g0.edge_mask
+    n_del = jnp.sum(dropped).astype(jnp.int32)
+    cd = jnp.where(dropped, g0.c, 0.0)
+    n_new = jnp.sum(valid).astype(jnp.int32)
+
+    # affected suffix start: min endpoint level over dropped AND inserted
+    # edges (both endpoint sets sit inside the re-peeled suffix)
+    lvl = jnp.minimum(
+        jnp.min(jnp.where(dropped, state.level[g0.src], _LEVEL_NEW)),
+        jnp.min(jnp.where(dropped, state.level[g0.dst], _LEVEL_NEW)),
+    )
+    lvl = jnp.minimum(lvl, jnp.min(jnp.where(valid, state.level[src], _LEVEL_NEW)))
+    lvl = jnp.minimum(lvl, jnp.min(jnp.where(valid, state.level[dst], _LEVEL_NEW)))
+    r0 = jnp.where((n_del > 0) | (n_new > 0), lvl, _LEVEL_NEW)
+    r0 = jnp.minimum(r0, jnp.int32(2**30))
+
+    # exact density of the old community in the post-deletion graph: it
+    # loses the dropped mass with both endpoints inside S^P (stale-low if
+    # best_g was already conservative — only ever under-reports, never
+    # hides fraud); re-seeds the best tracker since deletion may regress it
+    in_comm = state.community[g0.src] & state.community[g0.dst]
+    comm_loss = jnp.sum(jnp.where(dropped & in_comm, g0.c, 0.0))
+    n_comm = jnp.sum(state.community).astype(jnp.float32)
+    prior_g = jnp.where(
+        n_comm > 0, state.best_g - comm_loss / jnp.maximum(n_comm, 1.0),
+        -jnp.float32(jnp.inf),
+    )
+    return _SlideBookkeeping(
+        dropped=dropped, cd=cd, n_new=n_new, r0=r0,
+        keep=state.level >= r0, prior_g=prior_g,
+    )
+
+
+def _slide_epilogue(
+    state: DeviceSpadeState,
+    g: DeviceGraph,
+    res: PeelResultDevice,
+    bk: _SlideBookkeeping,
+    n_removed: jax.Array,
+    src, dst, c, valid,
+) -> DeviceSpadeState:
+    """Merge a warm re-peel back into the state (level rebase, community
+    update, exact w0 decrement/increment, edge-counter move)."""
+    g0 = state.graph
+    suffix_level = jnp.where(res.level >= 0, res.level, res.n_rounds)
+    new_level = jnp.where(bk.keep, bk.r0 + suffix_level, state.level)
+    improved = res.best_g > bk.prior_g
+    new_comm = jnp.where(
+        improved,
+        (res.level >= res.best_level) & bk.keep & g.vertex_mask,
+        state.community,
+    )
+    # exact on integer weights; padding lanes carry cd = 0 / cv = 0
+    w0 = state.w0.at[g0.src].add(-bk.cd, mode="drop")
+    w0 = w0.at[g0.dst].add(-bk.cd, mode="drop")
+    cv = jnp.where(valid, c.astype(jnp.float32), 0.0)
+    w0 = w0.at[src].add(cv, mode="drop")
+    w0 = w0.at[dst].add(cv, mode="drop")
+    return DeviceSpadeState(
+        graph=g,
+        level=new_level,
+        best_g=jnp.maximum(res.best_g, bk.prior_g),
+        community=new_comm,
+        edge_count=state.edge_count - n_removed + bk.n_new,
+        w0=w0,
+    )
+
+
+def delete_and_maintain(
+    state: DeviceSpadeState,
+    drop: jax.Array,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    unroll: bool = False,
+) -> DeviceSpadeState:
+    """Delete the edges in slot mask ``drop`` and maintain incrementally.
+
+    The deletion mirror of :func:`insert_and_maintain` (paper Appendix C.1,
+    vectorized — DESIGN.md §6): deleted edges only *lower* the weights of
+    their endpoints, and with ``r0 = min_{endpoints} level`` both endpoints
+    of every dropped edge sit inside the suffix ``level >= r0``, so no
+    prefix vertex's peel-time weight changes and only the suffix is
+    re-peeled.  Unlike insertion the maintained best density may legally
+    *regress*: the tracker is re-seeded with the exact density of the
+    previous community in the post-deletion graph (its stored value minus
+    the dropped mass with both endpoints inside it) rather than the stale
+    pre-deletion value.  ``remove_edges`` compacts the surviving slots to
+    the buffer prefix, so the edge counter simply shrinks by the number of
+    live edges dropped.
+
+    Exactly a window slide with an empty insert batch (the shared jitted
+    program handles both).
+    """
+    z = jnp.zeros(1, jnp.int32)
+    return slide_and_maintain(
+        state, drop, z, z, z.astype(jnp.float32), jnp.zeros(1, bool),
+        eps=eps, max_rounds=max_rounds, unroll=unroll,
+    )
+
+
+@partial(jax.jit, static_argnames=("eps", "max_rounds", "unroll"),
+         donate_argnames=("state",))
+def slide_and_maintain(
+    state: DeviceSpadeState,
+    drop: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    unroll: bool = False,
+) -> DeviceSpadeState:
+    """One fused sliding-window tick: expire ``drop``, insert the batch,
+    re-peel **once** (paper Appendix C.3, vectorized).
+
+    Composing :func:`delete_and_maintain` + :func:`insert_and_maintain`
+    would re-peel the affected suffix twice per tick; here ``r0`` is the
+    minimum endpoint level over dropped *and* inserted edges, so a single
+    warm re-peel covers both updates — the steady-state serving loop does
+    one device program per tick.  Bookkeeping composes the two paths:
+    ``w0`` is decremented by dropped mass and incremented by inserted
+    mass, the best-density tracker is re-seeded with the old community's
+    exact post-deletion density (DESIGN.md §6), and the edge counter
+    shrinks by the dropped count and grows by the inserted count.
+    """
+    bk = _slide_prologue(state, drop, src, dst, valid)
+    g, n_removed = remove_edges(state.graph, drop)
+    g = append_edges(g, state.edge_count - n_removed, src, dst, c, valid=valid)
+    res = bulk_peel_warm(g, bk.keep, prior_best_g=bk.prior_g, eps=eps,
+                         max_rounds=max_rounds, unroll=unroll)
+    return _slide_epilogue(state, g, res, bk, n_removed, src, dst, c, valid)
 
 
 @partial(jax.jit, static_argnames=("eps",))

@@ -26,10 +26,28 @@ from typing import Callable
 
 from .reference import AdjGraph
 
-__all__ = ["DensityMetric", "DG", "DW", "FD", "make_metric"]
+__all__ = ["DensityMetric", "DG", "DW", "FD", "make_metric", "quantize_susp"]
 
 VSuspFn = Callable[[int, AdjGraph], float]
 ESuspFn = Callable[[int, int, float, AdjGraph], float]
+
+# Suspiciousness values are snapped to a dyadic grid (multiples of 2^-30)
+# at the metric funnel.  Rationale (determinism contract, reference.py):
+# the incremental reorder recovers peeling weights as Delta_old + edge
+# terms while the from-scratch peel runs a running subtraction — different
+# float64 summation orders.  Irrational metric values (FD's 1/log) then
+# drift by an ulp between the two runs and the (weight, id) tie-break
+# resolves "equal" weights differently.  Grid values with magnitude below
+# 2^23 sum *exactly* in float64 in any order, so ties are exact ties and
+# the vertex-id tie-break is stable across incremental and scratch runs.
+# The 2^-30 (~1e-9 relative) snap is far below any fraud-semantics signal.
+_QUANT_BITS = 30
+_QUANTUM = math.ldexp(1.0, -_QUANT_BITS)
+
+
+def quantize_susp(x: float) -> float:
+    """Round a suspiciousness value to the shared dyadic grid."""
+    return math.ldexp(round(math.ldexp(x, _QUANT_BITS)), -_QUANT_BITS)
 
 
 @dataclass(frozen=True)
@@ -50,13 +68,14 @@ class DensityMetric:
         a = float(self.vsusp(u, g))
         if a < 0:
             raise ValueError(f"{self.name}: vsusp must be >= 0, got {a}")
-        return a
+        return quantize_susp(a)
 
     def edge_susp(self, u: int, v: int, raw: float, g: AdjGraph) -> float:
         c = float(self.esusp(u, v, raw, g))
         if c <= 0:
             raise ValueError(f"{self.name}: esusp must be > 0, got {c}")
-        return c
+        # positive weights must stay positive through the snap
+        return max(quantize_susp(c), _QUANTUM)
 
 
 # ---------------------------------------------------------------------------

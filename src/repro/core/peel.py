@@ -159,7 +159,14 @@ def _bulk_round(g: DeviceGraph, eps: float, s: _BulkState) -> _BulkState:
 
     thresh = 2.0 * (1.0 + eps) * g_cur
     peel = s.active & (s.w <= thresh)
-    # progress guarantee: avg_u w_u <= 2 g(S), so min-weight vertex always peels
+    # progress guarantee: avg_u w_u <= 2 g(S), so the min-weight vertex
+    # always peels *in exact arithmetic*.  Under f32 the running f can
+    # drift slightly negative on a nearly-drained set, pushing the
+    # threshold below every remaining weight and stalling the while_loop;
+    # force-peel the min-weight vertices then (a no-op whenever the
+    # threshold test already fired, hence invisible on integer weights).
+    wmin = jnp.min(jnp.where(s.active, s.w, _INF))
+    peel = jnp.where(jnp.any(peel), peel, s.active & (s.w <= wmin))
     e_ps = peel[g.src]
     e_pd = peel[g.dst]
     cm = jnp.where(s.edge_alive, g.c, 0.0)

@@ -7,6 +7,8 @@ with the developer-facing surface from the paper:
   :class:`~repro.core.metrics.DensityMetric`).
 * ``Detect``                 — current fraudulent community S^P.
 * ``InsertEdge`` / ``InsertBatchEdges`` — incremental maintenance.
+* ``DeleteEdge``             — incremental deletion (Appendix C.1); with
+  inserts this composes into time-window detection (C.3).
 * ``TurnOnEdgeGrouping``     — benign/urgent routing (§4.3, Def 4.1):
   benign edges queue in a buffer, urgent edges flush the buffer and trigger
   immediate reordering.
@@ -24,11 +26,12 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-from .metrics import DensityMetric, make_metric
+from .metrics import DensityMetric, make_metric, quantize_susp
 from .reference import (
     AdjGraph,
     PeelState,
     ReorderStats,
+    delete_edge,
     detect,
     insert_edges,
     static_peel,
@@ -149,6 +152,53 @@ class Spade:
         batch_new = self._benign_new_vertices + pending_new
         self._benign_edges, self._benign_new_vertices = [], []
         return self._reorder_and_detect(batch_edges, batch_new)
+
+    def DeleteEdge(self, u: int, v: int, c: float | None = None) -> InsertResult:
+        """Delete (all or ``c`` of) the combined edge weight between ``u``
+        and ``v`` and reorder incrementally (paper Appendix C.1).
+
+        ``c`` is in *suspiciousness units* — the stored adjacency weight,
+        i.e. what ``ESusp`` returned at arrival time (for DW that is the
+        grid-snapped raw amount; for FD the arrival-time degree weighting,
+        which cannot be recomputed from a raw amount later).  It is
+        snapped to the same dyadic grid as every stored weight, so passing
+        the original raw DW amount deletes the edge exactly instead of
+        tripping the more-than-present check or leaving a sub-quantum
+        residual edge.
+
+        The benign buffer is flushed first: a buffered edge may be the one
+        being expired, and the deletion invalidates the cached g(S^P) the
+        buffered edges were classified against — flushing re-anchors both.
+        Composed with ``InsertEdge`` this is the paper's C.3 time-window
+        maintenance on the host plane.
+        """
+        self._require_loaded()
+        if self._benign_edges or self._benign_new_vertices:
+            self.FlushBuffer()
+        u, v = int(u), int(v)
+        if c is not None:
+            c = quantize_susp(float(c))
+        w_before = self._g.adj[u].get(v, 0.0) if u < self._g.n else 0.0
+        t0 = time.perf_counter()
+        stats = delete_edge(self._state, u, v, c)
+        dt = time.perf_counter() - t0
+        w_removed = w_before - (self._g.adj[u].get(v, 0.0) if u < self._g.n else 0.0)
+        # O(1) w0 maintenance, mirroring the insert path's increment
+        self._w0_add(u, -w_removed)
+        self._w0_add(v, -w_removed)
+        comm, gb = detect(self._state)
+        comm_set = set(comm.tolist())
+        new_f = np.asarray(sorted(comm_set - self._prev_community), dtype=np.int64)
+        self._prev_community = comm_set
+        return InsertResult(
+            fraudsters=comm,
+            g_best=gb,
+            triggered=True,
+            buffered=0,
+            new_fraudsters=new_f,
+            stats=stats,
+            reorder_seconds=dt,
+        )
 
     def FlushBuffer(self) -> InsertResult:
         """Force-process all buffered benign edges (periodic batch tick)."""

@@ -16,9 +16,11 @@ from repro.dist.graph import (
     shard_graph,
     sharded_bulk_peel,
     sharded_bulk_peel_warm,
+    sharded_delete_and_maintain,
     sharded_full_refresh,
     sharded_insert_and_maintain,
     sharded_peel_weights,
+    sharded_slide_and_maintain,
 )
 from repro.dist.sharding import (
     AxisEnv,
@@ -42,5 +44,7 @@ __all__ = [
     "sharded_bulk_peel_warm",
     "init_sharded_state",
     "sharded_insert_and_maintain",
+    "sharded_delete_and_maintain",
+    "sharded_slide_and_maintain",
     "sharded_full_refresh",
 ]

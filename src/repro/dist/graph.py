@@ -30,6 +30,8 @@ single device                  sharded (``mesh=``, ``axis=``)
 ``DeviceGraph.peel_weights``   ``sharded_peel_weights``
 ``init_state``                 ``init_sharded_state``
 ``insert_and_maintain``        ``sharded_insert_and_maintain``
+``delete_and_maintain``        ``sharded_delete_and_maintain``
+``slide_and_maintain``         ``sharded_slide_and_maintain``
 ``full_refresh``               ``sharded_full_refresh``
 =============================  ========================================
 """
@@ -46,9 +48,14 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.incremental import _LEVEL_NEW, DeviceSpadeState
+from repro.core.incremental import (
+    _LEVEL_NEW,
+    DeviceSpadeState,
+    _slide_epilogue,
+    _slide_prologue,
+)
 from repro.core.peel import PeelResultDevice, _run_rounds
-from repro.graphstore.structs import DeviceGraph, compact_slots
+from repro.graphstore.structs import DeviceGraph, compact_slots, remove_edges
 
 __all__ = [
     "shard_graph",
@@ -57,6 +64,8 @@ __all__ = [
     "sharded_bulk_peel_warm",
     "init_sharded_state",
     "sharded_insert_and_maintain",
+    "sharded_delete_and_maintain",
+    "sharded_slide_and_maintain",
     "sharded_full_refresh",
 ]
 
@@ -162,6 +171,10 @@ def _local_peel_fn(axis: str, V: int, eps: float, max_rounds: int, warm: bool):
             best_level = jnp.where(improved, s.round_, s.best_level)
             thresh = 2.0 * (1.0 + eps) * g_cur
             peel = s.active & (s.w <= thresh)
+            # f32-drift progress fallback, mirroring core.peel._bulk_round
+            # (w is replicated, so every shard picks the same vertices)
+            wmin = jnp.min(jnp.where(s.active, s.w, _INF))
+            peel = jnp.where(jnp.any(peel), peel, s.active & (s.w <= wmin))
             e_ps = peel[src]
             e_pd = peel[dst]
             cm = jnp.where(s.edge_alive, c, 0.0)
@@ -275,6 +288,64 @@ def sharded_peel_weights(g: DeviceGraph, mesh: Mesh, axis: str = "data") -> jax.
 # ---------------------------------------------------------------------------
 
 
+def _sharded_append(
+    g: DeviceGraph,
+    offset: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    mesh: Mesh,
+    axis: str,
+) -> DeviceGraph:
+    """Sharded scatter-append: the batch is replicated; each shard writes
+    the entries whose global compacted slot falls in its block."""
+    n_shards = mesh.shape[axis]
+    e_local = g.e_capacity // n_shards
+
+    def append_local(ls, ld, lc, lm, bs, bd, bc, valid_b, off):
+        lo = jax.lax.axis_index(axis).astype(jnp.int32) * e_local
+        idx, ok = compact_slots(off, valid_b, g.e_capacity)
+        li = idx - lo
+        li = jnp.where(ok & (li >= 0) & (li < e_local), li, e_local)
+        return (
+            ls.at[li].set(bs.astype(jnp.int32), mode="drop"),
+            ld.at[li].set(bd.astype(jnp.int32), mode="drop"),
+            lc.at[li].set(bc.astype(jnp.float32), mode="drop"),
+            lm.at[li].set(True, mode="drop"),
+        )
+
+    es, rs = P(axis), P()
+    nsrc, ndst, nc, nmask = shard_map(
+        append_local,
+        mesh=mesh,
+        in_specs=(es, es, es, es, rs, rs, rs, rs, rs),
+        out_specs=(es,) * 4,
+        check_rep=False,
+    )(g.src, g.dst, g.c, g.edge_mask, src, dst, c, valid, offset)
+    return dataclasses.replace(g, src=nsrc, dst=ndst, c=nc, edge_mask=nmask)
+
+
+def _sharded_remove(
+    g: DeviceGraph, drop: jax.Array, mesh: Mesh, axis: str
+) -> tuple[DeviceGraph, jax.Array]:
+    """``remove_edges`` over sharded buffers: the compaction scatter runs
+    as plain jnp ops (GSPMD inserts the collectives) and the compacted
+    buffers are constrained back onto ``axis``."""
+    g, n_removed = remove_edges(g, drop)
+    esh = NamedSharding(mesh, P(axis))
+    return (
+        dataclasses.replace(
+            g,
+            src=jax.lax.with_sharding_constraint(g.src, esh),
+            dst=jax.lax.with_sharding_constraint(g.dst, esh),
+            c=jax.lax.with_sharding_constraint(g.c, esh),
+            edge_mask=jax.lax.with_sharding_constraint(g.edge_mask, esh),
+        ),
+        n_removed,
+    )
+
+
 def init_sharded_state(
     g: DeviceGraph, mesh: Mesh, axis: str = "data", eps: float = 0.1
 ) -> DeviceSpadeState:
@@ -314,31 +385,8 @@ def sharded_insert_and_maintain(
     recovery (replicated) -> sharded warm bulk re-peel -> state merge.
     """
     g = state.graph
-    n_shards = _check_divisible(g, mesh, axis)
-    e_local = g.e_capacity // n_shards
-    B = src.shape[0]
-
-    def append_local(ls, ld, lc, lm, bs, bd, bc, valid_b, offset):
-        lo = jax.lax.axis_index(axis).astype(jnp.int32) * e_local
-        idx, ok = compact_slots(offset, valid_b, g.e_capacity)
-        li = idx - lo
-        li = jnp.where(ok & (li >= 0) & (li < e_local), li, e_local)
-        return (
-            ls.at[li].set(bs.astype(jnp.int32), mode="drop"),
-            ld.at[li].set(bd.astype(jnp.int32), mode="drop"),
-            lc.at[li].set(bc.astype(jnp.float32), mode="drop"),
-            lm.at[li].set(True, mode="drop"),
-        )
-
-    es, rs = P(axis), P()
-    nsrc, ndst, nc, nmask = shard_map(
-        append_local,
-        mesh=mesh,
-        in_specs=(es, es, es, es, rs, rs, rs, rs, rs),
-        out_specs=(es,) * 4,
-        check_rep=False,
-    )(g.src, g.dst, g.c, g.edge_mask, src, dst, c, valid, state.edge_count)
-    g = dataclasses.replace(g, src=nsrc, dst=ndst, c=nc, edge_mask=nmask)
+    _check_divisible(g, mesh, axis)
+    g = _sharded_append(g, state.edge_count, src, dst, c, valid, mesh, axis)
     n_new = jnp.sum(valid).astype(jnp.int32)
 
     # affected suffix start (replicated math — level/batch are replicated)
@@ -373,6 +421,59 @@ def sharded_insert_and_maintain(
         edge_count=state.edge_count + n_new,
         w0=w0,
     )
+
+
+def sharded_delete_and_maintain(
+    state: DeviceSpadeState,
+    drop: jax.Array,
+    mesh: Mesh,
+    axis: str = "data",
+    eps: float = 0.1,
+    max_rounds: int = 0,
+) -> DeviceSpadeState:
+    """Edge-sharded twin of :func:`repro.core.incremental.delete_and_maintain`
+    — exactly a sharded window slide with an empty insert batch."""
+    z = jnp.zeros(1, jnp.int32)
+    return sharded_slide_and_maintain(
+        state, drop, z, z, z.astype(jnp.float32), jnp.zeros(1, bool),
+        mesh=mesh, axis=axis, eps=eps, max_rounds=max_rounds,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "eps", "max_rounds"),
+    donate_argnames=("state",),
+)
+def sharded_slide_and_maintain(
+    state: DeviceSpadeState,
+    drop: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    mesh: Mesh,
+    axis: str = "data",
+    eps: float = 0.1,
+    max_rounds: int = 0,
+) -> DeviceSpadeState:
+    """Edge-sharded twin of :func:`repro.core.incremental.slide_and_maintain`:
+    one fused window tick — sharded compaction, sharded append, a single
+    psum-reduced warm re-peel.  The suffix/density bookkeeping is the
+    single-device ``_slide_prologue`` / ``_slide_epilogue`` verbatim
+    (replicated math; GSPMD inserts the collectives), so the two engines
+    cannot drift and the result matches the single-device path exactly on
+    integer-valued suspiciousness."""
+    _check_divisible(state.graph, mesh, axis)
+    bk = _slide_prologue(state, drop, src, dst, valid)
+    g, n_removed = _sharded_remove(state.graph, drop, mesh, axis)
+    g = _sharded_append(
+        g, state.edge_count - n_removed, src, dst, c, valid, mesh, axis
+    )
+    res = _sharded_peel(
+        g, bk.keep, bk.prior_g, mesh, axis, eps, max_rounds, warm=True
+    )
+    return _slide_epilogue(state, g, res, bk, n_removed, src, dst, c, valid)
 
 
 @partial(jax.jit, static_argnames=("mesh", "axis", "eps"))

@@ -13,12 +13,19 @@ from .segment_ops import (
     segment_softmax,
     segment_sum,
 )
-from .structs import DeviceGraph, append_edges, csr_sort, device_graph_from_coo
+from .structs import (
+    DeviceGraph,
+    append_edges,
+    csr_sort,
+    device_graph_from_coo,
+    remove_edges,
+)
 
 __all__ = [
     "DeviceGraph",
     "device_graph_from_coo",
     "append_edges",
+    "remove_edges",
     "csr_sort",
     "segment_sum",
     "segment_mean",

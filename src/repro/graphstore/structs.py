@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["DeviceGraph", "device_graph_from_coo", "compact_slots",
-           "append_edges", "csr_sort"]
+           "append_edges", "remove_edges", "csr_sort"]
 
 
 def compact_slots(
@@ -148,6 +148,37 @@ def append_edges(
         dst=g.dst.at[idx].set(dst.astype(jnp.int32), mode="drop"),
         c=g.c.at[idx].set(c.astype(jnp.float32), mode="drop"),
         edge_mask=g.edge_mask.at[idx].set(True, mode="drop"),
+    )
+
+
+def remove_edges(g: DeviceGraph, drop: jax.Array) -> tuple[DeviceGraph, jax.Array]:
+    """Tombstone the slots where ``drop`` holds and compact the survivors.
+
+    The k-th surviving edge (in slot order) moves to slot ``k`` — the same
+    ``compact_slots`` math the append path uses, so insertion order is
+    preserved and the live region stays a prefix.  Sliding-window callers
+    exploit this: after every expiry the oldest batch is again the first
+    ``count`` slots.  Freed slots revert to the standard inert padding
+    (``src = dst = n_capacity - 1``, ``c = 0``, mask False).
+
+    Returns ``(graph, n_removed)`` with ``n_removed`` the number of *live*
+    edges dropped (tombstoning an already-dead slot is a no-op).
+    """
+    pad = jnp.int32(g.n_capacity - 1)
+    survive = g.edge_mask & ~drop
+    idx, ok = compact_slots(jnp.int32(0), survive, g.e_capacity)
+    idx = jnp.where(ok, idx, g.e_capacity)  # dead lanes scatter out of bounds
+    E = g.e_capacity
+    n_removed = jnp.sum(g.edge_mask & drop).astype(jnp.int32)
+    return (
+        dataclasses.replace(
+            g,
+            src=jnp.full(E, pad).at[idx].set(g.src, mode="drop"),
+            dst=jnp.full(E, pad).at[idx].set(g.dst, mode="drop"),
+            c=jnp.zeros(E, jnp.float32).at[idx].set(g.c, mode="drop"),
+            edge_mask=jnp.zeros(E, bool).at[idx].set(g.edge_mask, mode="drop"),
+        ),
+        n_removed,
     )
 
 

@@ -556,7 +556,7 @@ def build_cell(arch: str, shape: str, *, concrete: bool = False, smoke: bool = F
     shrinks the shape spec to CPU scale (same code path, tiny sizes).
 
     ``roofline=True`` builds the *analysis* variant: scans python-unrolled
-    (XLA cost_analysis counts while bodies once — DESIGN.md §6), coarse
+    (XLA cost_analysis counts while bodies once — DESIGN.md §7), coarse
     attention blocks to bound HLO size, microbatches=1 (identical total
     FLOPs).  Never executed; memory numbers come from the production
     variant."""

@@ -26,12 +26,14 @@ from repro.core.incremental import (
     full_refresh,
     init_state,
     insert_and_maintain,
+    slide_and_maintain,
 )
 from repro.dist.graph import (
     init_sharded_state,
     shard_graph,
     sharded_full_refresh,
     sharded_insert_and_maintain,
+    sharded_slide_and_maintain,
 )
 from repro.graphstore.generators import TxStream
 from repro.graphstore.structs import device_graph_from_coo
@@ -49,6 +51,9 @@ class DeviceServiceReport:
     fraud_recall: float
     final_g: float
     n_refreshes: int
+    window_ticks: int = 0  # 0 = unbounded (insert-only) service
+    n_expired_edges: int = 0  # edges that slid out of the window
+    live_edges: int = 0  # edges resident at shutdown
 
 
 def run_device_service(
@@ -61,6 +66,7 @@ def run_device_service(
     capacity_slack: float = 1.3,
     mesh: jax.sharding.Mesh | None = None,
     shard_axis: str = "data",
+    window_ticks: int = 0,
 ) -> DeviceServiceReport:
     """Replay ``stream`` through the device engine in fixed-size ticks.
 
@@ -68,11 +74,25 @@ def run_device_service(
     (vertex state replicated) and every tick runs the dist plane's
     psum-reduced engine (:mod:`repro.dist.graph`); without it, the
     single-device engine.  Results are identical up to reduction-order
-    rounding."""
+    rounding.
+
+    With ``window_ticks=N > 0`` the service runs in **sliding-window mode**
+    (paper Appendix C.3): each tick expires the stream batch falling out
+    of an N-tick ring *and* inserts the new batch in one fused
+    ``slide_and_maintain`` device program (a single warm re-peel covers
+    both updates), so only the base graph plus the last N ticks of
+    transactions are resident.  Because ``remove_edges`` compacts
+    survivors to the buffer prefix, the oldest resident batch always
+    occupies the slots right after the base graph and the edge capacity
+    is bounded by ``m_base + (N+1) * batch_edges`` regardless of stream
+    length."""
     n = stream.n_vertices
     m_base = stream.base_src.shape[0]
     m_total = m_base + stream.inc_src.shape[0]
-    e_cap = int(m_total * capacity_slack) + batch_edges
+    if window_ticks:
+        e_cap = m_base + (window_ticks + 1) * batch_edges
+    else:
+        e_cap = int(m_total * capacity_slack) + batch_edges
 
     if metric == "DG":
         base_w = np.ones(m_base, np.float32)
@@ -92,10 +112,12 @@ def run_device_service(
         state = init_sharded_state(g, mesh, axis=shard_axis, eps=eps)
         maintain = partial(sharded_insert_and_maintain, mesh=mesh, axis=shard_axis)
         refresh = partial(sharded_full_refresh, mesh=mesh, axis=shard_axis)
+        slide = partial(sharded_slide_and_maintain, mesh=mesh, axis=shard_axis)
     else:
         state = init_state(g, eps=eps)
         maintain = insert_and_maintain
         refresh = full_refresh
+        slide = slide_and_maintain
     deg_dev = jnp.zeros(g.n_capacity, jnp.int32).at[
         jnp.asarray(stream.base_dst)
     ].add(1)
@@ -104,7 +126,11 @@ def run_device_service(
     n_ticks = 0
     n_refresh = 0
     benign_total = 0
+    n_expired = 0
     t_total = 0.0
+    ring: list[int] = []  # per-tick resident edge counts, oldest first
+    detected: set[int] = set()  # windowed mode: vertices ever in S^P
+    slot_ids = jnp.arange(g.e_capacity, dtype=jnp.int32)
     for i in range(0, n_inc, batch_edges):
         j = min(i + batch_edges, n_inc)
         pad = batch_edges - (j - i)
@@ -124,18 +150,36 @@ def run_device_service(
         # padded tail lanes of a partial tick must not count toward stats
         benign_total += int(np.asarray(benign_mask(state, bs_d, bd_d, w))[valid].sum())
         t0 = time.perf_counter()
-        state = maintain(
-            state, bs_d, bd_d, w.astype(jnp.float32), valid_d,
-            eps=eps, max_rounds=max_rounds,
-        )
+        if window_ticks and len(ring) >= window_ticks:
+            # fused tick: expire the batch sliding out + insert the new one
+            # in a single device program (one warm re-peel).  After
+            # compaction the oldest resident batch always sits right after
+            # the base graph.
+            cnt0 = ring.pop(0)
+            drop = (slot_ids >= m_base) & (slot_ids < m_base + cnt0)
+            state = slide(
+                state, drop, bs_d, bd_d, w.astype(jnp.float32), valid_d,
+                eps=eps, max_rounds=max_rounds,
+            )
+            n_expired += cnt0
+        else:
+            state = maintain(
+                state, bs_d, bd_d, w.astype(jnp.float32), valid_d,
+                eps=eps, max_rounds=max_rounds,
+            )
         jax.block_until_ready(state.best_g)
         t_total += time.perf_counter() - t0
+        if window_ticks:
+            ring.append(int(valid.sum()))
+            # a windowed community is transient by design (the evidence
+            # expires); recall is therefore "ever detected while resident"
+            detected.update(np.where(np.asarray(state.community))[0].tolist())
         n_ticks += 1
         if refresh_every and n_ticks % refresh_every == 0:
             state = refresh(state, eps=eps)
             n_refresh += 1
 
-    comm = set(np.where(np.asarray(state.community))[0].tolist())
+    comm = set(np.where(np.asarray(state.community))[0].tolist()) | detected
     fraud = set(stream.fraud_block.tolist())
     recall = len(fraud & comm) / len(fraud) if fraud else 1.0
     return DeviceServiceReport(
@@ -147,4 +191,7 @@ def run_device_service(
         fraud_recall=recall,
         final_g=float(state.best_g),
         n_refreshes=n_refresh,
+        window_ticks=window_ticks,
+        n_expired_edges=n_expired,
+        live_edges=int(state.edge_count),
     )

@@ -273,6 +273,155 @@ def test_benign_mask_matches_host_urgency_stream():
     assert checked_benign > 0 and checked_urgent > 0  # both branches exercised
 
 
+def test_benign_mask_matches_host_urgency_with_deletions():
+    """Satellite of the sliding-window work: the vectorized Def 4.1 test
+    must keep agreeing with the host oracle when edges are *deleted* —
+    the decremented device w0 and the (possibly regressed) best density
+    both enter the urgency test.  Unique edge pairs keep the host's
+    combined-adjacency deletion 1:1 with device slots; integer weights
+    keep every sum exact."""
+    import dataclasses
+
+    from repro.core.incremental import delete_and_maintain
+    from repro.core.reference import delete_edge, peeling_weights_full
+
+    rng = np.random.default_rng(12)
+    n = 24
+    pairs = [(u, v) for u in range(n) for v in range(u + 1, n)]
+    rng.shuffle(pairs)
+    pairs = pairs[:80]
+    src = np.array([p[0] for p in pairs])
+    dst = np.array([p[1] for p in pairs])
+    c = rng.integers(1, 6, len(pairs)).astype(np.float32)
+    # heavy block so benign edges genuinely exist
+    for i in range(10):
+        c[i] = 40.0
+    a = rng.integers(0, 3, n).astype(np.float32)
+    g_dev = device_graph_from_coo(n, src, dst, c, a, e_capacity=len(pairs) + 32)
+    state = init_state(g_dev, eps=0.1)
+    host = to_oracle(n, src, dst, c, a)
+    host_state = static_peel(host)
+    _, g_best = detect(host_state)
+    w0_host = peeling_weights_full(host)
+
+    live = list(range(len(pairs)))
+    checked_benign = checked_urgent = 0
+    slot_ids = jnp.arange(g_dev.e_capacity, dtype=jnp.int32)
+    for step in range(12):
+        # delete one live edge on both planes
+        k = live[int(rng.integers(0, len(live)))]
+        em = np.asarray(state.graph.edge_mask)
+        slot = [
+            i for i in range(em.sum())
+            if (int(np.asarray(state.graph.src)[i]),
+                int(np.asarray(state.graph.dst)[i])) == pairs[k]
+        ][0]
+        state = delete_and_maintain(state, slot_ids == slot, eps=0.1)
+        delete_edge(host_state, *pairs[k])
+        w0_host[pairs[k][0]] -= c[k]
+        w0_host[pairs[k][1]] -= c[k]
+        live.remove(k)
+        _, g_best = detect(host_state)
+        np.testing.assert_allclose(np.asarray(state.w0)[:n], w0_host, rtol=1e-6)
+
+        # device benign test (with the host's exact g to isolate w0) must
+        # equal host urgency for random candidate edges
+        for _ in range(6):
+            u, v = (int(x) for x in rng.integers(0, n, 2))
+            if u == v:
+                continue
+            cv = float(rng.integers(1, 5))
+            host_urgent = (
+                w0_host[u] + cv >= g_best or w0_host[v] + cv >= g_best
+            )
+            dev = dataclasses.replace(state, best_g=jnp.float32(g_best))
+            dev_benign = bool(
+                benign_mask(
+                    dev,
+                    jnp.asarray([u], jnp.int32),
+                    jnp.asarray([v], jnp.int32),
+                    jnp.asarray([cv], jnp.float32),
+                )[0]
+            )
+            assert dev_benign == (not host_urgent), (step, u, v, cv)
+            checked_benign += dev_benign
+            checked_urgent += not dev_benign
+    assert checked_benign > 0 and checked_urgent > 0
+
+
+def test_edge_grouping_buffered_edges_then_deleted():
+    """Grouping + deletion interaction: benign edges sit in the buffer,
+    then the very same edges are deleted.  DeleteEdge must flush first
+    (the buffered edge has to exist in the graph to be removable) and the
+    final state must equal a scratch peel without the deleted edge."""
+    from repro.core.spade import Spade
+
+    sp = Spade(metric="DW", edge_grouping=True)
+    # heavy triangle 0-1-2 keeps g(S^P) high; 3 and 4 hang off it lightly,
+    # so an edge between them is benign under Def 4.1
+    sp.LoadGraph([0, 1, 2, 0, 0], [1, 2, 0, 3, 4],
+                 [100.0, 100.0, 100.0, 1.0, 1.0], n_vertices=5)
+    r1 = sp.InsertEdge(3, 4, 1.0)  # benign: buffers
+    assert not r1.triggered and sp.buffered_edges == 1
+    res = sp.DeleteEdge(3, 4)  # deletes the edge that was still buffered
+    assert res.triggered and sp.buffered_edges == 0
+    assert 4 not in sp.graph.adj[3]
+    expect = static_peel(sp.graph.copy())
+    np.testing.assert_array_equal(sp.state.order(), expect.order())
+    np.testing.assert_allclose(sp.state.delta(), expect.delta())
+
+    # buffered benign edge NOT deleted must survive a deletion elsewhere
+    r2 = sp.InsertEdge(4, 3, 1.0)
+    assert not r2.triggered and sp.buffered_edges == 1
+    sp.DeleteEdge(0, 3)
+    assert sp.buffered_edges == 0  # flush-first semantics
+    assert 3 in sp.graph.adj[4]  # the buffered edge was materialized
+    expect = static_peel(sp.graph.copy())
+    np.testing.assert_array_equal(sp.state.order(), expect.order())
+    # w0 stayed exact through buffer + flush + delete accounting
+    from repro.core.reference import peeling_weights_full
+
+    np.testing.assert_allclose(sp._w0[: sp.graph.n],
+                               peeling_weights_full(sp.graph))
+
+
+def test_spade_insert_delete_window_equals_scratch():
+    """Host-plane C.3 window: inserts + expiries through the public API
+    track a scratch peel of the surviving graph exactly."""
+    from repro.core.spade import Spade
+
+    rng = np.random.default_rng(21)
+    n = 20
+    base = []
+    seen = set()
+    while len(base) < 40:
+        u, v = (int(x) for x in rng.integers(0, n, 2))
+        if u == v or (u, v) in seen or (v, u) in seen:
+            continue
+        seen.add((u, v))
+        base.append((u, v, float(rng.integers(1, 6))))
+    sp = Spade(metric="DW")
+    sp.LoadGraph([e[0] for e in base], [e[1] for e in base],
+                 [e[2] for e in base], n_vertices=n)
+    window = list(base)
+    for _ in range(15):
+        # slide: insert a fresh unique edge, expire the oldest
+        while True:
+            u, v = (int(x) for x in rng.integers(0, n, 2))
+            if u != v and (u, v) not in seen and (v, u) not in seen:
+                break
+        seen.add((u, v))
+        cv = float(rng.integers(1, 6))
+        sp.InsertEdge(u, v, cv)
+        window.append((u, v, cv))
+        old = window.pop(0)
+        sp.DeleteEdge(old[0], old[1])
+        seen.discard((old[0], old[1]))
+        expect = static_peel(sp.graph.copy())
+        np.testing.assert_array_equal(sp.state.order(), expect.order())
+        np.testing.assert_allclose(sp.state.delta(), expect.delta())
+
+
 def test_append_compacts_interior_invalid_batch_entries():
     """Regression: the k-th *valid* edge of a batch must land in slot
     offset+k, or a later batch (offset advanced by sum(valid)) silently

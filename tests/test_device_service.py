@@ -56,3 +56,30 @@ def test_device_service_fd_metric():
     rep = run_device_service(stream, metric="FD", batch_edges=512)
     assert rep.n_edges == stream.inc_src.shape[0]
     assert np.isfinite(rep.final_g)
+
+
+def test_device_service_sliding_window():
+    """Windowed mode: resident edges bounded by base + N ticks, expiry
+    accounting closes (expired + live-beyond-base == streamed), and the
+    standing ring is still detected (its base-graph edges never expire)."""
+    stream = make_transaction_stream(n=2000, m=10000, seed=12)
+    rep = run_device_service(stream, metric="DW", batch_edges=256,
+                             window_ticks=2, refresh_every=3)
+    m_base = stream.base_src.shape[0]
+    assert rep.window_ticks == 2
+    assert rep.live_edges <= m_base + 2 * 256
+    assert rep.n_expired_edges == rep.n_edges - (rep.live_edges - m_base)
+    assert rep.fraud_recall >= 0.99
+    assert rep.final_g > 0
+    assert rep.n_refreshes >= 1
+
+
+def test_device_service_window_capacity_is_stream_length_independent():
+    """The whole point of the window: edge capacity depends on base size +
+    window, not on how long the stream runs."""
+    stream = make_transaction_stream(n=1000, m=5000, seed=14)
+    rep = run_device_service(stream, metric="DG", batch_edges=128,
+                             window_ticks=1)
+    m_base = stream.base_src.shape[0]
+    assert rep.live_edges <= m_base + 128
+    assert rep.n_ticks == -(-stream.inc_src.shape[0] // 128)

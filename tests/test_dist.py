@@ -13,13 +13,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.incremental import full_refresh, init_state, insert_and_maintain
+from repro.core.incremental import (
+    delete_and_maintain,
+    full_refresh,
+    init_state,
+    insert_and_maintain,
+)
 from repro.core.peel import bulk_peel
 from repro.dist.compression import ef_compress_tree
 from repro.dist.graph import (
     init_sharded_state,
     shard_graph,
     sharded_bulk_peel,
+    sharded_delete_and_maintain,
     sharded_full_refresh,
     sharded_insert_and_maintain,
     sharded_peel_weights,
@@ -212,6 +218,79 @@ def test_sharded_incremental_matches_single_device():
     np.testing.assert_array_equal(
         np.asarray(st_sh.community), np.asarray(st_ref.community)
     )
+
+
+@multi_device
+def test_sharded_delete_matches_single_device():
+    """Interleaved inserts + slot-range deletions: the compaction scatter,
+    suffix recovery, w0 decrement and community bookkeeping all track the
+    single-device engine bit-for-bit (integer weights)."""
+    n = 200
+    g = random_graph(5, n=n)
+    mesh = data_mesh(len(jax.devices()))
+    rng = np.random.default_rng(6)
+    st_ref = init_state(g, eps=0.1)
+    st_sh = init_sharded_state(shard_graph(g, mesh), mesh, eps=0.1)
+    for step in range(4):
+        B = 64
+        bs = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+        bd = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+        bc = jnp.asarray(rng.integers(1, 4, B), jnp.float32)
+        valid = bs != bd
+        st_ref = insert_and_maintain(st_ref, bs, bd, bc, valid, eps=0.1)
+        st_sh = sharded_insert_and_maintain(
+            st_sh, bs, bd, bc, valid, mesh=mesh, eps=0.1
+        )
+        lo = int(rng.integers(0, 300))
+        hi = lo + int(rng.integers(1, 80))
+        ids_r = jnp.arange(st_ref.graph.e_capacity, dtype=jnp.int32)
+        ids_s = jnp.arange(st_sh.graph.e_capacity, dtype=jnp.int32)
+        st_ref = delete_and_maintain(st_ref, (ids_r >= lo) & (ids_r < hi),
+                                     eps=0.1)
+        st_sh = sharded_delete_and_maintain(
+            st_sh, (ids_s >= lo) & (ids_s < hi), mesh=mesh, eps=0.1
+        )
+        assert float(st_sh.best_g) == float(st_ref.best_g), step
+        assert int(st_sh.edge_count) == int(st_ref.edge_count)
+        np.testing.assert_array_equal(
+            np.asarray(st_sh.level), np.asarray(st_ref.level)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(st_sh.community), np.asarray(st_ref.community)
+        )
+        np.testing.assert_allclose(np.asarray(st_sh.w0), np.asarray(st_ref.w0))
+        E = st_ref.graph.e_capacity
+        np.testing.assert_array_equal(
+            np.asarray(st_sh.graph.src)[:E], np.asarray(st_ref.graph.src)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(st_sh.graph.edge_mask)[:E],
+            np.asarray(st_ref.graph.edge_mask),
+        )
+
+
+@multi_device
+def test_device_service_sharded_windowed_matches_single():
+    """Sliding-window serving on the mesh: every tick runs expire + insert
+    through the psum-reduced engine; final state matches the single-device
+    windowed service (DG metric: unit weights, order-robust sums)."""
+    from repro.graphstore.generators import make_transaction_stream
+    from repro.serve.device_service import run_device_service
+
+    mesh = data_mesh(len(jax.devices()))
+    stream = make_transaction_stream(n=800, m=4000, seed=13)
+    rep1 = run_device_service(
+        stream, metric="DG", batch_edges=128, max_rounds=10, window_ticks=3,
+    )
+    repn = run_device_service(
+        stream, metric="DG", batch_edges=128, max_rounds=10, window_ticks=3,
+        mesh=mesh,
+    )
+    assert repn.final_g == rep1.final_g
+    assert repn.live_edges == rep1.live_edges
+    assert repn.n_expired_edges == rep1.n_expired_edges
+    m_base = stream.base_src.shape[0]
+    assert rep1.live_edges <= m_base + 3 * 128
 
 
 @multi_device
