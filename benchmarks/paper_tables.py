@@ -10,6 +10,9 @@ container; the paper's claims are *ratios*, which transfer):
 * ``bench_window``              — Appendix C.3 sliding-window serving:
   steady-state warm tick (expire + insert suffix re-peels) vs a full
   from-scratch bulk re-peel per tick; emits ``BENCH_window.json``.
+* ``bench_workset``             — affected-area workset engine (DESIGN.md
+  §8): bucketed workset tick vs full-buffer warm tick, hot/cold, plus
+  per-bucket warm re-peel rows; emits ``BENCH_workset.json``.
 
 Every row prints ``name,us_per_call,derived`` CSV (derived = speedup /
 ratio / aux metric for that row).
@@ -157,6 +160,95 @@ def bench_device_plane(seed=3) -> list[Row]:
     return rows
 
 
+class _WindowBenchEnv:
+    """Shared harness for the sliding-window benches (``bench_window`` /
+    ``bench_workset``): base graph factory, hot-pool probe, and a regime
+    runner.  Every regime re-seeds its own batch stream, so any two
+    regimes (and both engines) replay IDENTICAL transaction sequences —
+    suffix sizes drive the tick cost, so comparing different streams
+    would compare unlike workloads."""
+
+    def __init__(self, n, m, batch, window, seed):
+        self.n, self.batch, self.window, self.seed = n, batch, window, seed
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, n, m)
+        dst = rng.integers(0, n, m)
+        keep = src != dst
+        self.m_base = int(keep.sum())
+        self._coo = (src[keep], dst[keep])
+        # hot pool: the vertices the last peel removed in the final rounds
+        probe = self.fresh_state()
+        lv = np.asarray(probe.level)
+        lv = np.where(np.asarray(probe.graph.vertex_mask), lv, -1)
+        self.hot_pool = np.argsort(lv)[-max(batch // 2, 64):]
+
+    def fresh_state(self):
+        from repro.core.incremental import init_state
+        from repro.graphstore.structs import device_graph_from_coo
+
+        g = device_graph_from_coo(
+            self.n, *self._coo, np.ones(self.m_base, np.float32),
+            e_capacity=self.m_base + (self.window + 1) * self.batch,
+        )
+        return init_state(g, eps=0.1)
+
+    def run_regime(self, hot_pool, workset=False, reps=5):
+        """Steady-state mean tick seconds for one traffic regime.
+
+        Returns ``(tick_seconds, final_state, telemetry)``; telemetry is
+        all zeros for the fused full-buffer engine."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.incremental import (
+            slide_and_maintain,
+            slide_and_maintain_auto,
+        )
+
+        state = self.fresh_state()
+        n, batch, window, m_base = self.n, self.batch, self.window, self.m_base
+        slot_ids = jnp.arange(state.graph.e_capacity, dtype=jnp.int32)
+        ring: list[int] = []
+        telemetry = {"workset": 0, "fallback": 0, "max_e_bucket": 0}
+        rng = np.random.default_rng(self.seed + 100)  # per-regime stream
+
+        def make_batch():
+            if hot_pool is None:
+                bs, bd = rng.integers(0, n, batch), rng.integers(0, n, batch)
+            else:
+                bs, bd = rng.choice(hot_pool, batch), rng.choice(hot_pool, batch)
+            bs = jnp.asarray(bs, jnp.int32)
+            bd = jnp.asarray(bd, jnp.int32)
+            return bs, bd, jnp.ones(batch, jnp.float32), bs != bd
+
+        def tick(state):
+            cnt0 = ring.pop(0) if len(ring) >= window else 0
+            drop = (slot_ids >= m_base) & (slot_ids < m_base + cnt0)
+            bs, bd, bc, valid = make_batch()
+            if workset:
+                state, info = slide_and_maintain_auto(
+                    state, drop, bs, bd, bc, valid, eps=0.1
+                )
+                telemetry["fallback" if info.fallback else "workset"] += 1
+                telemetry["max_e_bucket"] = max(
+                    telemetry["max_e_bucket"], info.e_bucket
+                )
+            else:
+                state = slide_and_maintain(state, drop, bs, bd, bc, valid,
+                                           eps=0.1)
+            ring.append(int(jnp.sum(valid)))
+            return state
+
+        for _ in range(window + 1):  # fill the window + warm compile caches
+            state = tick(state)
+        jax.block_until_ready(state.best_g)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            state = tick(state)
+        jax.block_until_ready(state.best_g)
+        return (time.perf_counter() - t0) / reps, state, telemetry
+
+
 def bench_window(
     n=100_000,
     m=400_000,
@@ -181,67 +273,12 @@ def bench_window(
     import json
 
     import jax
-    import jax.numpy as jnp
 
-    from repro.core.incremental import init_state, slide_and_maintain
     from repro.core.peel import bulk_peel
-    from repro.graphstore.structs import device_graph_from_coo
 
-    rng = np.random.default_rng(seed)
-    src = rng.integers(0, n, m)
-    dst = rng.integers(0, n, m)
-    keep = src != dst
-    m_base = int(keep.sum())
-
-    def fresh_state():
-        g = device_graph_from_coo(
-            n, src[keep], dst[keep], np.ones(m_base, np.float32),
-            e_capacity=m_base + (window + 1) * batch,
-        )
-        return init_state(g, eps=0.1)
-
-    def run_regime(hot_pool):
-        state = fresh_state()
-        slot_ids = jnp.arange(state.graph.e_capacity, dtype=jnp.int32)
-        ring: list[int] = []
-
-        def make_batch():
-            if hot_pool is None:
-                bs = rng.integers(0, n, batch)
-                bd = rng.integers(0, n, batch)
-            else:
-                bs = rng.choice(hot_pool, batch)
-                bd = rng.choice(hot_pool, batch)
-            bs = jnp.asarray(bs, jnp.int32)
-            bd = jnp.asarray(bd, jnp.int32)
-            return bs, bd, jnp.ones(batch, jnp.float32), bs != bd
-
-        def tick(state):
-            cnt0 = ring.pop(0) if len(ring) >= window else 0
-            drop = (slot_ids >= m_base) & (slot_ids < m_base + cnt0)
-            bs, bd, bc, valid = make_batch()
-            state = slide_and_maintain(state, drop, bs, bd, bc, valid, eps=0.1)
-            ring.append(int(jnp.sum(valid)))
-            return state
-
-        for _ in range(window + 1):  # fill the window + warm compile caches
-            state = tick(state)
-        jax.block_until_ready(state.best_g)
-        reps = 5
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            state = tick(state)
-        jax.block_until_ready(state.best_g)
-        return (time.perf_counter() - t0) / reps, state
-
-    # hot pool: the vertices the last peel removed in the final rounds
-    probe = fresh_state()
-    lv = np.asarray(probe.level)
-    lv = np.where(np.asarray(probe.graph.vertex_mask), lv, -1)
-    hot_pool = np.argsort(lv)[-max(batch // 2, 64):]
-
-    t_cold, state = run_regime(None)
-    t_hot, _ = run_regime(hot_pool)
+    env = _WindowBenchEnv(n, m, batch, window, seed)
+    t_cold, state, _ = env.run_regime(None)
+    t_hot, _, _ = env.run_regime(env.hot_pool)
 
     # naive alternative: full bulk re-peel of the resident graph per tick
     res = jax.block_until_ready(bulk_peel(state.graph, eps=0.1))  # compile
@@ -263,6 +300,106 @@ def bench_window(
                 {
                     "n": int(n), "m": int(m), "batch": int(batch),
                     "window": int(window),
+                    "rows": {r[0]: {"us": r[1], "derived": r[2]} for r in rows},
+                },
+                f, indent=1,
+            )
+    return rows
+
+
+def bench_workset(
+    n=100_000,
+    m=400_000,
+    batch=1024,
+    window=8,
+    seed=4,
+    out_json="BENCH_workset.json",
+) -> list[Row]:
+    """Affected-area workset engine (DESIGN.md §8) vs the full-buffer warm
+    tick, same setup as :func:`bench_window`:
+
+    * **hot ticks** — fraud-burst traffic on the densest vertices: the
+      affected suffix is small, the workset engine gathers it into
+      bucket-sized buffers and every re-peel round touches O(|suffix|)
+      instead of O(E_capacity).
+    * **cold ticks** — uniform traffic: the suffix swallows the graph and
+      the engine falls back to the full-buffer path (tick ≈ full tick +
+      the one-transfer count sync).
+    * **per-bucket rows** — the warm suffix re-peel alone (no structural
+      update), workset vs full-buffer, across suffix sizes landing in
+      successive power-of-two buckets.
+
+    Writes ``out_json`` so the perf trajectory is recorded per commit."""
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.peel import (
+        bulk_peel_warm,
+        bulk_peel_warm_workset,
+        select_bucket,
+        workset_sizes,
+    )
+
+    env = _WindowBenchEnv(n, m, batch, window, seed)
+    t_full_hot, state_hot, _ = env.run_regime(env.hot_pool, workset=False)
+    t_ws_hot, _, tel_hot = env.run_regime(env.hot_pool, workset=True)
+    t_full_cold, _, _ = env.run_regime(None, workset=False)
+    t_ws_cold, _, tel_cold = env.run_regime(None, workset=True)
+
+    rows: list[Row] = [
+        ("workset_tick_hot", t_ws_hot * 1e6, t_full_hot / max(t_ws_hot, 1e-9)),
+        ("workset_tick_cold", t_ws_cold * 1e6,
+         t_full_cold / max(t_ws_cold, 1e-9)),
+        ("workset_full_tick_hot", t_full_hot * 1e6, 1.0),
+        ("workset_full_tick_cold", t_full_cold * 1e6, 1.0),
+    ]
+
+    # per-bucket rows: the warm re-peel alone over suffixes of growing size
+    g = state_hot.graph
+    lv = np.where(np.asarray(g.vertex_mask), np.asarray(state_hot.level), -1)
+    order = np.argsort(lv)
+    seen: set[int] = set()
+    for k in (max(batch // 4, 64), batch, 4 * batch, 16 * batch):
+        if k > n:
+            continue
+        kmask = jnp.zeros(g.n_capacity, bool).at[
+            jnp.asarray(order[-k:], jnp.int32)
+        ].set(True)
+        nv, ne = workset_sizes(g, kmask)
+        bv = select_bucket(int(nv), g.n_capacity)
+        be = select_bucket(int(ne), g.e_capacity)
+        if bv is None or be is None or be in seen:
+            continue
+        seen.add(be)
+        reps = 3
+
+        def timed(f):
+            out = jax.block_until_ready(f())  # compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = f()
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / reps
+
+        t_ws = timed(lambda: bulk_peel_warm_workset(
+            g, kmask, prior_best_g=state_hot.best_g, eps=0.1, max_rounds=20,
+            v_bucket=bv, e_bucket=be,
+        ))
+        t_fb = timed(lambda: bulk_peel_warm(
+            g, kmask, prior_best_g=state_hot.best_g, eps=0.1, max_rounds=20,
+        ))
+        rows.append((f"workset_peel_b{be}", t_ws * 1e6,
+                     t_fb / max(t_ws, 1e-9)))
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(
+                {
+                    "n": int(n), "m": int(m), "batch": int(batch),
+                    "window": int(window),
+                    "hot_ticks": tel_hot, "cold_ticks": tel_cold,
                     "rows": {r[0]: {"us": r[1], "derived": r[2]} for r in rows},
                 },
                 f, indent=1,

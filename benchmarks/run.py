@@ -21,10 +21,19 @@ def main() -> None:
                     help="forced XLA host devices for the sharded rows")
     ap.add_argument("--sharded-only", action="store_true",
                     help="only the dist-plane rows (BENCH_dist.json)")
+    ap.add_argument("--workset-only", action="store_true",
+                    help="only the workset-engine rows (BENCH_workset.json; "
+                         "the CI smoke lane)")
     args = ap.parse_args()
 
     rows = []
-    if args.sharded_only:
+    if args.workset_only:
+        from benchmarks.paper_tables import bench_workset
+
+        wskw = (dict(n=20_000, m=80_000, batch=512, window=4)
+                if args.quick else {})
+        rows += bench_workset(**wskw)
+    elif args.sharded_only:
         # must precede jax backend init (first jax.devices() call below)
         if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
             os.environ["XLA_FLAGS"] = (
@@ -42,6 +51,7 @@ def main() -> None:
             bench_incremental_speedup,
             bench_prevention,
             bench_window,
+            bench_workset,
         )
 
         kw = dict(n=4000, m=20000, n_inc=600) if args.quick else {}
@@ -51,6 +61,7 @@ def main() -> None:
         rows += bench_device_plane()
         wkw = dict(n=20_000, m=80_000, batch=512, window=4) if args.quick else {}
         rows += bench_window(**wkw)
+        rows += bench_workset(**wkw)
         # sharded rows run in a subprocess: the forced multi-device
         # topology must not contaminate the legacy single-device rows
         # (this backend is already initialized single-device by now)

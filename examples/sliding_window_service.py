@@ -20,14 +20,16 @@ stream = make_transaction_stream(n=5000, m=25000, seed=12)
 m_base = stream.base_src.shape[0]
 
 print(f"{'mode':<12} {'recall':>7} {'final_g':>10} {'live_edges':>11} "
-      f"{'expired':>8} {'ms/tick':>8}")
-for label, window in [("unbounded", 0), ("window-16", 16), ("window-4", 4)]:
+      f"{'expired':>8} {'ms/tick':>8} {'ws/fb':>7}")
+for label, window, ws in [("unbounded", 0, False), ("window-16", 16, False),
+                          ("window-4", 4, False), ("workset-4", 4, True)]:
     rep = run_device_service(stream, metric="DW", batch_edges=512,
                              max_rounds=20, refresh_every=16,
-                             window_ticks=window)
+                             window_ticks=window, workset=ws)
     print(f"{label:<12} {rep.fraud_recall:>7.2f} {rep.final_g:>10.1f} "
           f"{rep.live_edges:>11} {rep.n_expired_edges:>8} "
-          f"{1e3 * rep.mean_tick_seconds:>8.1f}")
+          f"{1e3 * rep.mean_tick_seconds:>8.1f} "
+          f"{rep.n_workset_ticks:>3}/{rep.n_fallback_ticks:<3}")
 
 # host-plane mirror of one window slide: exact incremental delete (C.1)
 sp = Spade(metric="DW")

@@ -5,14 +5,65 @@ The host plane evaluates ``esusp`` per edge at arrival; the device plane
 weights whole batches at once.  FD's column weighting needs the live
 destination in-degree — maintained as an int32 vector updated with the
 same scatter that appends the edges.
+
+Quantization boundary: :func:`seed_base_weights` snaps the base graph to
+the host funnel's dyadic 2^-30 grid (float64 math on host), but the
+*streamed* tick weights below stay raw float32 — the exact float64 snap
+is not reproducible on device without x64, so host-vs-device weight
+parity on streamed edges holds to f32 ulps (and exactly on integer
+weights, which is what the differential harnesses pin).
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["dg_weights", "dw_weights", "fd_weights", "fd_batch_weights"]
+from repro.core.metrics import _QUANTUM, quantize_susp_array
+
+__all__ = ["dg_weights", "dw_weights", "fd_weights", "fd_batch_weights",
+           "seed_base_weights"]
+
+
+def seed_base_weights(
+    metric: str,
+    src: np.ndarray,
+    dst: np.ndarray,
+    amt: np.ndarray,
+    n: int,
+    C: float = 5.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Base-graph edge suspiciousness for a device-plane service (host side).
+
+    One definition of the FD/DW/DG base-weight seeding shared by every
+    service plane (single-device and mesh-sharded alike), snapped to the
+    same dyadic 2^-30 grid as the host metric funnel
+    (:func:`repro.core.metrics.quantize_susp`) so the two planes' stored
+    weights cannot drift by an ulp and weight ties stay exact ties.
+
+    FD uses the *loaded-graph* destination in-degree (the device plane
+    seeds the whole base graph at once; per-arrival degrees start with the
+    incremental stream, via :func:`fd_batch_weights`).
+
+    Returns ``(base_w float32 [m], in_deg int64 [n])`` — the in-degree
+    vector doubles as the FD degree state the streaming ticks continue
+    from.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    in_deg = np.zeros(n, np.int64)
+    np.add.at(in_deg, dst, 1)
+    if metric == "DG":
+        w = np.ones(src.shape[0], np.float64)
+    elif metric == "DW":
+        w = np.maximum(np.asarray(amt, np.float64), 1e-12)
+    elif metric == "FD":
+        w = 1.0 / np.log(in_deg[dst] + C)
+    else:
+        raise KeyError(f"unknown metric {metric!r}; choose from DG/DW/FD")
+    w = np.maximum(quantize_susp_array(w), _QUANTUM)  # positive through the snap
+    return w.astype(np.float32), in_deg
 
 
 def dg_weights(amounts: jax.Array) -> jax.Array:

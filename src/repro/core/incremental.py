@@ -29,16 +29,27 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.peel import PeelResultDevice, bulk_peel, bulk_peel_warm
+from repro.core.peel import (
+    PeelResultDevice,
+    bulk_peel,
+    bulk_peel_warm,
+    bulk_peel_warm_workset,
+    select_bucket,
+    workset_sizes,
+)
 from repro.graphstore.structs import DeviceGraph, append_edges, remove_edges
 
 __all__ = [
     "DeviceSpadeState",
+    "WorksetTickInfo",
     "init_state",
     "insert_and_maintain",
+    "insert_and_maintain_auto",
     "delete_and_maintain",
     "slide_and_maintain",
+    "slide_and_maintain_auto",
     "full_refresh",
     "benign_mask",
 ]
@@ -87,62 +98,6 @@ def benign_mask(state: DeviceSpadeState, src, dst, c) -> jax.Array:
     return ~urgent
 
 
-@partial(jax.jit, static_argnames=("eps", "max_rounds", "unroll"),
-         donate_argnames=("state",))
-def insert_and_maintain(
-    state: DeviceSpadeState,
-    src: jax.Array,
-    dst: jax.Array,
-    c: jax.Array,
-    valid: jax.Array,
-    eps: float = 0.1,
-    max_rounds: int = 0,
-    unroll: bool = False,
-) -> DeviceSpadeState:
-    """Insert an edge batch and maintain the community incrementally.
-
-    ``src/dst/c`` are fixed-size batch arrays with a ``valid`` mask
-    (streaming ticks pad to the batch size).  One fused device program:
-    append -> affected-suffix recovery -> warm bulk re-peel -> state merge.
-    """
-    g = append_edges(state.graph, state.edge_count, src, dst, c, valid=valid)
-    n_new = jnp.sum(valid).astype(jnp.int32)
-
-    # affected suffix start: min endpoint level over the valid batch
-    lvl_src = jnp.where(valid, state.level[src], _LEVEL_NEW)
-    lvl_dst = jnp.where(valid, state.level[dst], _LEVEL_NEW)
-    r0 = jnp.minimum(jnp.min(lvl_src), jnp.min(lvl_dst))
-    r0 = jnp.where(n_new > 0, r0, _LEVEL_NEW)  # empty batch: re-peel nothing
-    r0 = jnp.minimum(r0, jnp.int32(2**30))  # overflow-safe rebasing
-    keep = state.level >= r0
-
-    res = bulk_peel_warm(g, keep, prior_best_g=state.best_g, eps=eps,
-                         max_rounds=max_rounds, unroll=unroll)
-
-    # rebase suffix levels above the untouched prefix; vertices still active
-    # at a max_rounds cutoff conceptually peel in the final round
-    suffix_level = jnp.where(res.level >= 0, res.level, res.n_rounds)
-    new_level = jnp.where(keep, r0 + suffix_level, state.level)
-    improved = res.best_g > state.best_g
-    new_comm = jnp.where(
-        improved,
-        (res.level >= res.best_level) & keep & g.vertex_mask,
-        state.community,
-    )
-    w0 = state.w0
-    cv = jnp.where(valid, c.astype(jnp.float32), 0.0)
-    w0 = w0.at[src].add(cv, mode="drop")
-    w0 = w0.at[dst].add(cv, mode="drop")
-    return DeviceSpadeState(
-        graph=g,
-        level=new_level,
-        best_g=jnp.maximum(res.best_g, state.best_g),
-        community=new_comm,
-        edge_count=state.edge_count + n_new,
-        w0=w0,
-    )
-
-
 class _SlideBookkeeping(NamedTuple):
     """Replicated pre-re-peel bookkeeping shared by the single-device and
     the mesh-sharded window-slide paths (one definition so the two engines
@@ -157,31 +112,41 @@ class _SlideBookkeeping(NamedTuple):
 
 
 def _slide_prologue(
-    state: DeviceSpadeState, drop: jax.Array, src, dst, valid
+    state: DeviceSpadeState, drop: jax.Array | None, src, dst, valid
 ) -> _SlideBookkeeping:
+    """``drop = None`` marks an insert-only tick at trace time: the dropped
+    bookkeeping collapses to inert zeros and the [E]-sized passes over the
+    drop mask are elided from the program entirely."""
     g0 = state.graph
-    dropped = drop & g0.edge_mask
-    n_del = jnp.sum(dropped).astype(jnp.int32)
-    cd = jnp.where(dropped, g0.c, 0.0)
     n_new = jnp.sum(valid).astype(jnp.int32)
-
-    # affected suffix start: min endpoint level over dropped AND inserted
-    # edges (both endpoint sets sit inside the re-peeled suffix)
-    lvl = jnp.minimum(
-        jnp.min(jnp.where(dropped, state.level[g0.src], _LEVEL_NEW)),
-        jnp.min(jnp.where(dropped, state.level[g0.dst], _LEVEL_NEW)),
-    )
+    if drop is None:
+        dropped = jnp.zeros(g0.e_capacity, bool)
+        n_del = jnp.int32(0)
+        cd = jnp.zeros(g0.e_capacity, jnp.float32)
+        lvl = _LEVEL_NEW
+        comm_loss = jnp.float32(0.0)
+    else:
+        dropped = drop & g0.edge_mask
+        n_del = jnp.sum(dropped).astype(jnp.int32)
+        cd = jnp.where(dropped, g0.c, 0.0)
+        # affected suffix start: min endpoint level over dropped AND
+        # inserted edges (both endpoint sets sit inside the suffix)
+        lvl = jnp.minimum(
+            jnp.min(jnp.where(dropped, state.level[g0.src], _LEVEL_NEW)),
+            jnp.min(jnp.where(dropped, state.level[g0.dst], _LEVEL_NEW)),
+        )
+        # exact density loss of the old community in the post-deletion
+        # graph: the dropped mass with both endpoints inside S^P
+        in_comm = state.community[g0.src] & state.community[g0.dst]
+        comm_loss = jnp.sum(jnp.where(dropped & in_comm, g0.c, 0.0))
     lvl = jnp.minimum(lvl, jnp.min(jnp.where(valid, state.level[src], _LEVEL_NEW)))
     lvl = jnp.minimum(lvl, jnp.min(jnp.where(valid, state.level[dst], _LEVEL_NEW)))
     r0 = jnp.where((n_del > 0) | (n_new > 0), lvl, _LEVEL_NEW)
     r0 = jnp.minimum(r0, jnp.int32(2**30))
 
-    # exact density of the old community in the post-deletion graph: it
-    # loses the dropped mass with both endpoints inside S^P (stale-low if
-    # best_g was already conservative — only ever under-reports, never
-    # hides fraud); re-seeds the best tracker since deletion may regress it
-    in_comm = state.community[g0.src] & state.community[g0.dst]
-    comm_loss = jnp.sum(jnp.where(dropped & in_comm, g0.c, 0.0))
+    # re-seed the best tracker with the old community's exact post-deletion
+    # density (stale-low if best_g was already conservative — only ever
+    # under-reports, never hides fraud); deletion may legally regress it
     n_comm = jnp.sum(state.community).astype(jnp.float32)
     prior_g = jnp.where(
         n_comm > 0, state.best_g - comm_loss / jnp.maximum(n_comm, 1.0),
@@ -200,9 +165,24 @@ def _slide_epilogue(
     bk: _SlideBookkeeping,
     n_removed: jax.Array,
     src, dst, c, valid,
+    with_drops: bool = True,
+    d_bucket: int = 0,
 ) -> DeviceSpadeState:
     """Merge a warm re-peel back into the state (level rebase, community
-    update, exact w0 decrement/increment, edge-counter move)."""
+    update, exact w0 decrement/increment, edge-counter move).
+
+    ``with_drops = False`` (insert-only ticks) statically elides the
+    dropped-mass w0 decrement, restoring in-place donation of the edge
+    buffers (the decrement gathers pre-update ``src/dst``, which otherwise
+    blocks XLA from reusing them for the appended graph).
+
+    ``d_bucket > 0`` (workset dispatch; the host has synced the dropped
+    count) compacts the dropped edges into a ``d_bucket``-sized buffer by
+    the same searchsorted gather the workset uses, so the decrement
+    scatter-adds O(dropped) updates instead of O(E_capacity) — on a
+    steady-state tick the dropped batch is ~1k lanes of a ~400k buffer.
+    Identical sums on integer weights; scatter-add order may differ
+    otherwise (the same reduction-order caveat as the sharded engine)."""
     g0 = state.graph
     suffix_level = jnp.where(res.level >= 0, res.level, res.n_rounds)
     new_level = jnp.where(bk.keep, bk.r0 + suffix_level, state.level)
@@ -213,8 +193,23 @@ def _slide_epilogue(
         state.community,
     )
     # exact on integer weights; padding lanes carry cd = 0 / cv = 0
-    w0 = state.w0.at[g0.src].add(-bk.cd, mode="drop")
-    w0 = w0.at[g0.dst].add(-bk.cd, mode="drop")
+    w0 = state.w0
+    if with_drops and d_bucket:
+        dsum = jnp.cumsum(bk.dropped.astype(jnp.int32))
+        nd = dsum[g0.e_capacity - 1]
+        lane = jnp.arange(d_bucket, dtype=jnp.int32)
+        didx = jnp.searchsorted(dsum, lane + 1).astype(jnp.int32)
+        dlive = lane < nd
+        didx = jnp.where(dlive, didx, 0)
+        pad = jnp.int32(g0.n_capacity)  # out of range -> dropped by scatter
+        dsrc = jnp.where(dlive, g0.src[didx], pad)
+        ddst = jnp.where(dlive, g0.dst[didx], pad)
+        dc = jnp.where(dlive, bk.cd[didx], 0.0)
+        w0 = w0.at[dsrc].add(-dc, mode="drop")
+        w0 = w0.at[ddst].add(-dc, mode="drop")
+    elif with_drops:
+        w0 = w0.at[g0.src].add(-bk.cd, mode="drop")
+        w0 = w0.at[g0.dst].add(-bk.cd, mode="drop")
     cv = jnp.where(valid, c.astype(jnp.float32), 0.0)
     w0 = w0.at[src].add(cv, mode="drop")
     w0 = w0.at[dst].add(cv, mode="drop")
@@ -226,6 +221,37 @@ def _slide_epilogue(
         edge_count=state.edge_count - n_removed + bk.n_new,
         w0=w0,
     )
+
+
+@partial(jax.jit, static_argnames=("eps", "max_rounds", "unroll"),
+         donate_argnames=("state",))
+def insert_and_maintain(
+    state: DeviceSpadeState,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    unroll: bool = False,
+) -> DeviceSpadeState:
+    """Insert an edge batch and maintain the community incrementally.
+
+    ``src/dst/c`` are fixed-size batch arrays with a ``valid`` mask
+    (streaming ticks pad to the batch size).  One fused device program:
+    append -> affected-suffix recovery -> warm bulk re-peel -> state merge.
+    The suffix/merge bookkeeping is the shared ``_slide_prologue`` /
+    ``_slide_epilogue`` with an empty drop mask (insertion is a window
+    slide that expires nothing — one definition for insert/delete/slide,
+    so the three paths cannot drift); unlike the slide the live prefix is
+    untouched, so the compaction pass is skipped entirely.
+    """
+    bk = _slide_prologue(state, None, src, dst, valid)
+    g = append_edges(state.graph, state.edge_count, src, dst, c, valid=valid)
+    res = bulk_peel_warm(g, bk.keep, prior_best_g=bk.prior_g, eps=eps,
+                         max_rounds=max_rounds, unroll=unroll)
+    return _slide_epilogue(state, g, res, bk, jnp.int32(0), src, dst, c, valid,
+                           with_drops=False)
 
 
 def delete_and_maintain(
@@ -292,6 +318,152 @@ def slide_and_maintain(
     res = bulk_peel_warm(g, bk.keep, prior_best_g=bk.prior_g, eps=eps,
                          max_rounds=max_rounds, unroll=unroll)
     return _slide_epilogue(state, g, res, bk, n_removed, src, dst, c, valid)
+
+
+# ---------------------------------------------------------------------------
+# workset dispatch: gather the affected suffix, peel the workset only
+# ---------------------------------------------------------------------------
+#
+# The fused programs above stream the full capacity-padded buffers every
+# round.  The workset engine (DESIGN.md §8) splits a tick into two device
+# programs: phase A applies the structural update and counts the affected
+# suffix; the host syncs the two count scalars, picks power-of-two buckets
+# (O(log E) jitted variants), and dispatches phase B — the warm re-peel
+# over the gathered workset, or the full-buffer path when the suffix
+# exceeds the largest bucket.
+
+
+class WorksetTickInfo(NamedTuple):
+    """Host-side telemetry for one auto-dispatched maintenance tick.
+
+    ``n_suffix_edges`` is the global suffix-induced live-edge count on a
+    single device but the MAX **per-shard** count under a mesh (the
+    sharded engine buckets each shard's local workset; see
+    ``sharded_workset_sizes``) — compare across modes accordingly.
+    """
+
+    n_suffix_vertices: int
+    n_suffix_edges: int
+    v_bucket: int  # 0 on fallback
+    e_bucket: int  # 0 on fallback
+    fallback: bool
+
+
+@jax.jit
+def _insert_phase_a(state, src, dst, c, valid):
+    bk = _slide_prologue(state, None, src, dst, valid)
+    g = append_edges(state.graph, state.edge_count, src, dst, c, valid=valid)
+    nv, ne = workset_sizes(g, bk.keep)
+    return g, bk, jnp.int32(0), nv, ne
+
+
+@jax.jit
+def _slide_phase_a(state, drop, src, dst, c, valid):
+    bk = _slide_prologue(state, drop, src, dst, valid)
+    g, n_removed = remove_edges(state.graph, drop)
+    g = append_edges(g, state.edge_count - n_removed, src, dst, c, valid=valid)
+    nv, ne = workset_sizes(g, bk.keep)
+    return g, bk, n_removed, nv, ne
+
+
+@partial(
+    jax.jit,
+    static_argnames=("eps", "max_rounds", "v_bucket", "e_bucket", "use_kernel",
+                     "with_drops", "d_bucket"),
+    donate_argnames=("state", "g"),
+)
+def _phase_b(
+    state, g, bk, n_removed, src, dst, c, valid,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    v_bucket: int = 0,
+    e_bucket: int = 0,
+    use_kernel: bool = False,
+    with_drops: bool = True,
+    d_bucket: int = 0,
+):
+    """Warm re-peel + state merge.  ``v_bucket/e_bucket = 0`` selects the
+    full-buffer fallback; otherwise the bucketed workset path."""
+    if v_bucket and e_bucket:
+        res = bulk_peel_warm_workset(
+            g, bk.keep, prior_best_g=bk.prior_g, eps=eps, max_rounds=max_rounds,
+            v_bucket=v_bucket, e_bucket=e_bucket, use_kernel=use_kernel,
+        )
+    else:
+        res = bulk_peel_warm(g, bk.keep, prior_best_g=bk.prior_g, eps=eps,
+                             max_rounds=max_rounds, use_kernel=use_kernel)
+    return _slide_epilogue(state, g, res, bk, n_removed, src, dst, c, valid,
+                           with_drops=with_drops, d_bucket=d_bucket)
+
+
+def _dispatch_phase_b(
+    state, g, bk, n_removed, src, dst, c, valid,
+    nv, ne, eps, max_rounds, use_kernel, min_bucket, with_drops=True,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    n_cap, e_cap = state.graph.n_capacity, state.graph.e_capacity
+    # the tick's only device->host sync: three scalars, one transfer
+    nv_i, ne_i, nd_i = (int(x) for x in np.asarray(
+        jnp.stack([nv, ne, n_removed])
+    ))
+    bv = select_bucket(nv_i, n_cap, floor=min_bucket)
+    be = select_bucket(ne_i, e_cap, floor=min_bucket)
+    if bv is None or be is None:  # suffix too large: full-buffer fallback
+        bv = be = 0
+    # nothing actually dropped (e.g. window still filling): statically skip
+    # the w0 decrement — same program as an insert tick, no extra variant
+    with_drops = with_drops and nd_i > 0
+    # bucket the dropped-edge count too: the w0 decrement then scatters
+    # O(dropped) updates instead of O(E_capacity) (None -> full scatter)
+    bd = 0
+    if with_drops:
+        bd = select_bucket(nd_i, e_cap, floor=min_bucket) or 0
+    new_state = _phase_b(
+        state, g, bk, n_removed, src, dst, c, valid,
+        eps=eps, max_rounds=max_rounds, v_bucket=bv, e_bucket=be,
+        use_kernel=use_kernel, with_drops=with_drops, d_bucket=bd,
+    )
+    return new_state, WorksetTickInfo(nv_i, ne_i, bv, be, not (bv and be))
+
+
+def insert_and_maintain_auto(
+    state: DeviceSpadeState,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    use_kernel: bool = False,
+    min_bucket: int = 64,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """:func:`insert_and_maintain` through the workset engine.
+
+    Two device programs + one scalar sync per tick; bit-identical to the
+    fused path on integer weights (workset or fallback alike).
+    """
+    g, bk, n_removed, nv, ne = _insert_phase_a(state, src, dst, c, valid)
+    return _dispatch_phase_b(state, g, bk, n_removed, src, dst, c, valid,
+                             nv, ne, eps, max_rounds, use_kernel, min_bucket,
+                             with_drops=False)
+
+
+def slide_and_maintain_auto(
+    state: DeviceSpadeState,
+    drop: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    use_kernel: bool = False,
+    min_bucket: int = 64,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """:func:`slide_and_maintain` through the workset engine (also covers
+    pure deletion: pass an all-False ``valid``)."""
+    g, bk, n_removed, nv, ne = _slide_phase_a(state, drop, src, dst, c, valid)
+    return _dispatch_phase_b(state, g, bk, n_removed, src, dst, c, valid,
+                             nv, ne, eps, max_rounds, use_kernel, min_bucket)
 
 
 @partial(jax.jit, static_argnames=("eps",))

@@ -26,7 +26,8 @@ from typing import Callable
 
 from .reference import AdjGraph
 
-__all__ = ["DensityMetric", "DG", "DW", "FD", "make_metric", "quantize_susp"]
+__all__ = ["DensityMetric", "DG", "DW", "FD", "make_metric", "quantize_susp",
+           "quantize_susp_array"]
 
 VSuspFn = Callable[[int, AdjGraph], float]
 ESuspFn = Callable[[int, int, float, AdjGraph], float]
@@ -48,6 +49,20 @@ _QUANTUM = math.ldexp(1.0, -_QUANT_BITS)
 def quantize_susp(x: float) -> float:
     """Round a suspiciousness value to the shared dyadic grid."""
     return math.ldexp(round(math.ldexp(x, _QUANT_BITS)), -_QUANT_BITS)
+
+
+def quantize_susp_array(x):
+    """Vectorized :func:`quantize_susp` (numpy, float64 intermediate).
+
+    ``np.rint`` rounds half-to-even exactly like the scalar ``round``, so
+    host-plane per-edge quantization and device-plane batch seeding land
+    on identical grid points — the single definition both planes share.
+    """
+    import numpy as np
+
+    return np.ldexp(
+        np.rint(np.ldexp(np.asarray(x, np.float64), _QUANT_BITS)), -_QUANT_BITS
+    )
 
 
 @dataclass(frozen=True)

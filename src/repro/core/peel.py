@@ -33,8 +33,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphstore.structs import DeviceGraph
+from repro.kernels.peel_round.ops import peel_round
 
-__all__ = ["PeelResultDevice", "exact_peel", "bulk_peel", "bulk_peel_warm"]
+__all__ = [
+    "PeelResultDevice",
+    "exact_peel",
+    "bulk_peel",
+    "bulk_peel_warm",
+    "bulk_peel_warm_workset",
+    "select_bucket",
+    "workset_sizes",
+]
 
 _INF = jnp.float32(jnp.inf)
 
@@ -144,14 +153,34 @@ class _BulkState(NamedTuple):
     round_: jax.Array
 
 
-def _bulk_round(g: DeviceGraph, eps: float, s: _BulkState) -> _BulkState:
-    """One bulk-peeling round.
+def _round_step(
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    a: jax.Array,
+    eps: float,
+    use_kernel: bool,
+    s: _BulkState,
+) -> _BulkState:
+    """One bulk-peeling round over explicit COO arrays.
+
+    Shared by the full-buffer round (``src/dst/c/a`` are the graph's
+    capacity-padded buffers) and the workset round (the gathered affected
+    suffix with locally relabeled endpoints) — one definition so the two
+    engines cannot drift.
 
     (§Perf note: deriving edge liveness on the fly instead of carrying the
     [E] bool state was tried and REFUTED — two extra [E]-sized gathers +
     mask ops cost more HBM traffic than the stored array saves.)
+
+    ``use_kernel`` routes the elementwise state update (threshold compare,
+    weight subtract, active/level merge, peeled-mass partial sums) through
+    the fused :func:`repro.kernels.peel_round.ops.peel_round` kernel
+    (Pallas on TPU, pure-jnp reference elsewhere).  On integer weights the
+    two paths are bit-identical; the flag exists so the kernel is exercised
+    by the production round rather than staying interpret-only dead code.
     """
-    V = g.n_capacity
+    V = s.w.shape[0]
     g_cur = s.f / jnp.maximum(s.n_act, 1).astype(jnp.float32)
     improved = (g_cur > s.best_g) & (s.n_act > 0)
     best_g = jnp.where(improved, g_cur, s.best_g)
@@ -166,43 +195,68 @@ def _bulk_round(g: DeviceGraph, eps: float, s: _BulkState) -> _BulkState:
     # force-peel the min-weight vertices then (a no-op whenever the
     # threshold test already fired, hence invisible on integer weights).
     wmin = jnp.min(jnp.where(s.active, s.w, _INF))
+    eff_thresh = jnp.where(jnp.any(peel), thresh, wmin)
     peel = jnp.where(jnp.any(peel), peel, s.active & (s.w <= wmin))
-    e_ps = peel[g.src]
-    e_pd = peel[g.dst]
-    cm = jnp.where(s.edge_alive, g.c, 0.0)
-    # f loses peeled vertex weight + every edge with >= 1 peeled endpoint
-    f = (
-        s.f
-        - jnp.sum(jnp.where(peel, g.a, 0.0))
-        - jnp.sum(jnp.where(e_ps | e_pd, cm, 0.0))
-    )
-    # survivors lose suspiciousness of edges to peeled endpoints
+    e_ps = peel[src]
+    e_pd = peel[dst]
+    cm = jnp.where(s.edge_alive, c, 0.0)
+    # every edge with >= 1 peeled endpoint leaves the restricted set
+    drop_mass = jnp.sum(jnp.where(e_ps | e_pd, cm, 0.0))
+    # survivors lose suspiciousness of edges to peeled endpoints (the
+    # round's SpMV: segment-sum form of the gather_segsum primitive)
     dw = jax.ops.segment_sum(
-        jnp.where(e_ps & ~e_pd, cm, 0.0), g.dst, num_segments=V
-    ) + jax.ops.segment_sum(jnp.where(e_pd & ~e_ps, cm, 0.0), g.src, num_segments=V)
-    w = s.w - dw
+        jnp.where(e_ps & ~e_pd, cm, 0.0), dst, num_segments=V
+    ) + jax.ops.segment_sum(jnp.where(e_pd & ~e_ps, cm, 0.0), src, num_segments=V)
+    if use_kernel:
+        # fused elementwise half: recomputes the same peel mask from
+        # eff_thresh and applies the state update in one VMEM pass
+        w, active, level, _, partials = peel_round(
+            s.w, a, s.active, s.level, dw, eff_thresh, s.round_
+        )
+        f = s.f - partials[0] - drop_mass
+        n_act = s.n_act - partials[2].astype(jnp.int32)
+    else:
+        w = s.w - dw
+        active = s.active & ~peel
+        level = jnp.where(peel, s.round_, s.level)
+        # f loses peeled vertex weight + the dropped edge mass
+        f = s.f - jnp.sum(jnp.where(peel, a, 0.0)) - drop_mass
+        n_act = s.n_act - jnp.sum(peel)
     return _BulkState(
         w=w,
-        active=s.active & ~peel,
+        active=active,
         edge_alive=s.edge_alive & ~(e_ps | e_pd),
         f=f,
-        n_act=s.n_act - jnp.sum(peel),
-        level=jnp.where(peel, s.round_, s.level),
+        n_act=n_act,
+        level=level,
         best_g=best_g,
         best_level=best_level,
         round_=s.round_ + 1,
     )
 
 
-@partial(jax.jit, static_argnames=("eps", "max_rounds", "unroll"))
+def _bulk_round(
+    g: DeviceGraph, eps: float, s: _BulkState, use_kernel: bool = False
+) -> _BulkState:
+    """One full-buffer bulk-peeling round (see :func:`_round_step`)."""
+    return _round_step(g.src, g.dst, g.c, g.a, eps, use_kernel, s)
+
+
+@partial(jax.jit, static_argnames=("eps", "max_rounds", "unroll", "use_kernel"))
 def bulk_peel(
-    g: DeviceGraph, eps: float = 0.1, max_rounds: int = 0, unroll: bool = False
+    g: DeviceGraph,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    unroll: bool = False,
+    use_kernel: bool = False,
 ) -> PeelResultDevice:
     """Threshold bulk peeling; guarantees ``g_best >= g* / (2(1+eps))``.
 
     ``max_rounds = 0`` runs to completion (while_loop); a positive value
     bounds the round count (useful for fixed-cost serving ticks).
     ``unroll`` python-unrolls max_rounds rounds (roofline lowering).
+    ``use_kernel`` routes the per-round elementwise update through the
+    fused ``peel_round`` kernel (bit-identical on integer weights).
     """
     w0 = g.peel_weights()
     init = _BulkState(
@@ -217,7 +271,9 @@ def bulk_peel(
         round_=jnp.int32(0),
     )
 
-    state = _run_rounds(partial(_bulk_round, g, eps), init, max_rounds, unroll)
+    state = _run_rounds(
+        partial(_bulk_round, g, eps, use_kernel=use_kernel), init, max_rounds, unroll
+    )
     return PeelResultDevice(
         level=state.level,
         best_level=state.best_level,
@@ -246,6 +302,7 @@ def bulk_peel_warm(
     eps: float = 0.1,
     max_rounds: int = 0,
     unroll: bool = False,
+    use_kernel: bool = False,
 ) -> PeelResultDevice:
     """Bulk peel restricted to ``keep`` vertices (warm start).
 
@@ -254,6 +311,13 @@ def bulk_peel_warm(
     restricted set, so every round's threshold is valid on the current set
     and the 2(1+eps) guarantee is preserved (DESIGN.md §2).  ``prior_best_g``
     seeds the best-density tracker so the maintained best never regresses.
+
+    This is the **full-buffer** warm path: every round still streams the
+    capacity-padded ``[E]``/``[V]`` buffers.  The workset twin
+    (:func:`bulk_peel_warm_workset`) gathers the suffix into compact
+    bucketed buffers first and is the steady-state serving path; this
+    function remains the fallback when the suffix exceeds the largest
+    bucket (DESIGN.md §8).
     """
     V = g.n_capacity
     live = keep & g.vertex_mask
@@ -275,7 +339,9 @@ def bulk_peel_warm(
         best_level=jnp.int32(0),
         round_=jnp.int32(0),
     )
-    state = _run_rounds(partial(_bulk_round, g, eps), init, max_rounds, unroll)
+    state = _run_rounds(
+        partial(_bulk_round, g, eps, use_kernel=use_kernel), init, max_rounds, unroll
+    )
     return PeelResultDevice(
         level=state.level,
         best_level=state.best_level,
@@ -283,4 +349,185 @@ def bulk_peel_warm(
         n_rounds=state.round_,
         order=jnp.zeros(V, jnp.int32),
         delta=state.w,
+    )
+
+
+# ---------------------------------------------------------------------------
+# affected-area workset engine (the paper's §4 "affected area", materialized)
+# ---------------------------------------------------------------------------
+#
+# A warm re-peel only ever touches the affected suffix ``keep``, yet the
+# full-buffer round above streams all of ``[E]``/``[V]`` every round.  The
+# workset engine gathers the suffix's live vertices and induced live edges
+# into small fixed-capacity buffers once per tick, runs every round over
+# those buffers only, and scatters ``level`` back — converting per-round
+# work from O(E_capacity) to O(|affected suffix|).  Buffer sizes come from
+# a power-of-two bucket ladder so the number of distinct jit compilations
+# is O(log E), not O(E) (DESIGN.md §8).
+
+
+def select_bucket(count: int, capacity: int, floor: int = 64) -> int | None:
+    """Pick the power-of-two workset bucket for ``count`` elements.
+
+    Returns the smallest power of two ``>= max(count, floor)``, or ``None``
+    when ``count`` exceeds the largest bucket — the largest power of two
+    ``<= max(capacity // 2, floor)``.  A workset larger than half the
+    backing buffer cannot meaningfully beat streaming the buffer itself,
+    so the caller falls through to the full-buffer warm path.  Host-side
+    pure function: callers sync the (tiny) count scalar, pick the bucket,
+    and dispatch the statically-shaped jitted variant.
+    """
+    if count < 0:
+        raise ValueError(f"negative workset count {count}")
+    largest = max(capacity // 2, floor)
+    largest = 1 << (largest.bit_length() - 1)  # round DOWN to a power of two
+    if count > largest:
+        return None
+    bucket = max(count, floor)
+    return 1 << (bucket - 1).bit_length()  # round UP to a power of two
+
+
+@partial(jax.jit)
+def workset_sizes(g: DeviceGraph, keep: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(live suffix vertices, suffix-induced live edges) — the two counts
+    bucket selection needs, as device scalars (one fused reduction pass)."""
+    live = keep & g.vertex_mask
+    both = live[g.src] & live[g.dst] & g.edge_mask
+    return jnp.sum(live).astype(jnp.int32), jnp.sum(both).astype(jnp.int32)
+
+
+class Workset(NamedTuple):
+    """The gathered affected suffix (all leading dims are bucket-sized).
+
+    ``vid[j]``: global id of local vertex ``j`` (= ``n_capacity`` on pad
+    lanes, so scatter-back drops them).  Edge endpoints are local ids; pad
+    edge lanes carry ``c = 0`` / ``alive = False`` and endpoint 0 (inert:
+    zero suspiciousness contributes nothing to any segment).
+    """
+
+    vid: jax.Array  # int32 [Bv]
+    a: jax.Array  # float32 [Bv]
+    active: jax.Array  # bool [Bv]
+    src: jax.Array  # int32 [Be] local
+    dst: jax.Array  # int32 [Be] local
+    c: jax.Array  # float32 [Be]
+    alive: jax.Array  # bool [Be]
+
+
+def _compact_workset(
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    emask: jax.Array,
+    a: jax.Array,
+    live: jax.Array,
+    v_bucket: int,
+    e_bucket: int,
+) -> Workset:
+    """Compact the affected suffix into bucket-sized buffers.
+
+    The k-th live vertex (in id order) gets local id k — the same dense
+    slot semantics as ``compact_slots``/``remove_edges``, so the local
+    order is deterministic and shard-independent.  Like ``remove_edges``,
+    the compaction is a **gather**: workset lane ``k`` locates the k-th
+    live vertex/edge by binary search over a prefix sum — no [E]-sized
+    scatter touches the tick's critical path.  Callers guarantee (via
+    :func:`select_bucket`) that the counts fit the buckets.
+
+    Takes raw COO arrays so the sharded engine can reuse it verbatim with
+    a shard's *local* edge block (vertex arrays replicated): one
+    definition of the gather for both planes.
+    """
+    V = a.shape[0]
+    vsum = jnp.cumsum(live.astype(jnp.int32))  # [V]
+    local = vsum - 1  # local id per live vertex
+    nv = vsum[V - 1]
+    vlane = jnp.arange(v_bucket, dtype=jnp.int32)
+    vid = jnp.searchsorted(vsum, vlane + 1).astype(jnp.int32)
+    active0 = vlane < nv
+    vid = jnp.where(active0, vid, V)  # pad lanes dropped on scatter-back
+    a_ws = a.at[vid].get(mode="fill", fill_value=0.0)
+
+    both = live[src] & live[dst] & emask
+    esum = jnp.cumsum(both.astype(jnp.int32))  # [E]
+    ne = esum[src.shape[0] - 1]
+    elane = jnp.arange(e_bucket, dtype=jnp.int32)
+    eidx = jnp.searchsorted(esum, elane + 1).astype(jnp.int32)
+    alive0 = elane < ne
+    eidx = jnp.where(alive0, eidx, 0)  # clamp; pad lanes masked below
+    # pad edge lanes: endpoint 0 with c = 0 is inert in every segment op
+    lsrc = jnp.where(alive0, local[src[eidx]], 0)
+    ldst = jnp.where(alive0, local[dst[eidx]], 0)
+    c_ws = jnp.where(alive0, c[eidx], 0.0)
+    return Workset(vid=vid, a=a_ws, active=active0, src=lsrc, dst=ldst,
+                   c=c_ws, alive=alive0)
+
+
+def _gather_workset(
+    g: DeviceGraph, keep: jax.Array, v_bucket: int, e_bucket: int
+) -> Workset:
+    live = keep & g.vertex_mask
+    return _compact_workset(g.src, g.dst, g.c, g.edge_mask, g.a, live,
+                            v_bucket, e_bucket)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("eps", "max_rounds", "unroll", "v_bucket", "e_bucket",
+                     "use_kernel"),
+)
+def bulk_peel_warm_workset(
+    g: DeviceGraph,
+    keep: jax.Array,
+    prior_best_g: jax.Array,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    unroll: bool = False,
+    *,
+    v_bucket: int,
+    e_bucket: int,
+    use_kernel: bool = False,
+) -> PeelResultDevice:
+    """Workset twin of :func:`bulk_peel_warm`: gather → peel → scatter.
+
+    Bit-identical to the full-buffer warm peel on integer weights: the
+    workset holds exactly the suffix's live vertices and induced live
+    edges, every per-vertex/per-set quantity is the same integer sum (f32
+    sums of integers are exact in any order), and the round sequence is
+    driven by those quantities only.  See DESIGN.md §8 for the correctness
+    argument across the scatter-back.
+    """
+    V = g.n_capacity
+    ws = _gather_workset(g, keep, v_bucket, e_bucket)
+    cm0 = jnp.where(ws.alive, ws.c, 0.0)
+    w0 = ws.a + jax.ops.segment_sum(cm0, ws.src, num_segments=v_bucket)
+    w0 = w0 + jax.ops.segment_sum(cm0, ws.dst, num_segments=v_bucket)
+    f0 = jnp.sum(ws.a) + jnp.sum(cm0)
+
+    init = _BulkState(
+        w=w0,
+        active=ws.active,
+        edge_alive=ws.alive,
+        f=f0,
+        n_act=jnp.sum(ws.active),
+        level=jnp.full(v_bucket, -1, jnp.int32),
+        best_g=prior_best_g.astype(jnp.float32),
+        best_level=jnp.int32(0),
+        round_=jnp.int32(0),
+    )
+    state = _run_rounds(
+        partial(_round_step, ws.src, ws.dst, ws.c, ws.a, eps, use_kernel),
+        init, max_rounds, unroll,
+    )
+    # scatter the suffix results back to full-width vertex arrays; pad
+    # lanes carry vid = V and are dropped
+    level = jnp.full(V, -1, jnp.int32).at[ws.vid].set(state.level, mode="drop")
+    delta = jnp.zeros(V, jnp.float32).at[ws.vid].set(state.w, mode="drop")
+    return PeelResultDevice(
+        level=level,
+        best_level=state.best_level,
+        best_g=state.best_g,
+        n_rounds=state.round_,
+        order=jnp.zeros(V, jnp.int32),
+        delta=delta,
     )

@@ -176,13 +176,17 @@ class Spade:
         if self._benign_edges or self._benign_new_vertices:
             self.FlushBuffer()
         u, v = int(u), int(v)
+        if u >= self._g.n or v >= self._g.n:
+            # match delete_edge's missing-edge contract instead of letting
+            # the adjacency lookup die with a bare IndexError
+            raise KeyError(f"no edge between {u} and {v}")
         if c is not None:
             c = quantize_susp(float(c))
-        w_before = self._g.adj[u].get(v, 0.0) if u < self._g.n else 0.0
+        w_before = self._g.adj[u].get(v, 0.0)
         t0 = time.perf_counter()
         stats = delete_edge(self._state, u, v, c)
         dt = time.perf_counter() - t0
-        w_removed = w_before - (self._g.adj[u].get(v, 0.0) if u < self._g.n else 0.0)
+        w_removed = w_before - self._g.adj[u].get(v, 0.0)
         # O(1) w0 maintenance, mirroring the insert path's increment
         self._w0_add(u, -w_removed)
         self._w0_add(v, -w_removed)

@@ -16,11 +16,14 @@ from repro.dist.graph import (
     shard_graph,
     sharded_bulk_peel,
     sharded_bulk_peel_warm,
+    sharded_bulk_peel_warm_workset,
     sharded_delete_and_maintain,
     sharded_full_refresh,
     sharded_insert_and_maintain,
+    sharded_insert_and_maintain_auto,
     sharded_peel_weights,
     sharded_slide_and_maintain,
+    sharded_slide_and_maintain_auto,
 )
 from repro.dist.sharding import (
     AxisEnv,
@@ -42,9 +45,12 @@ __all__ = [
     "sharded_peel_weights",
     "sharded_bulk_peel",
     "sharded_bulk_peel_warm",
+    "sharded_bulk_peel_warm_workset",
     "init_sharded_state",
     "sharded_insert_and_maintain",
+    "sharded_insert_and_maintain_auto",
     "sharded_delete_and_maintain",
     "sharded_slide_and_maintain",
+    "sharded_slide_and_maintain_auto",
     "sharded_full_refresh",
 ]

@@ -27,11 +27,14 @@ single device                  sharded (``mesh=``, ``axis=``)
 =============================  ========================================
 ``bulk_peel``                  ``sharded_bulk_peel``
 ``bulk_peel_warm``             ``sharded_bulk_peel_warm``
+``bulk_peel_warm_workset``     ``sharded_bulk_peel_warm_workset``
 ``DeviceGraph.peel_weights``   ``sharded_peel_weights``
 ``init_state``                 ``init_sharded_state``
 ``insert_and_maintain``        ``sharded_insert_and_maintain``
+``insert_and_maintain_auto``   ``sharded_insert_and_maintain_auto``
 ``delete_and_maintain``        ``sharded_delete_and_maintain``
 ``slide_and_maintain``         ``sharded_slide_and_maintain``
+``slide_and_maintain_auto``    ``sharded_slide_and_maintain_auto``
 ``full_refresh``               ``sharded_full_refresh``
 =============================  ========================================
 """
@@ -49,12 +52,17 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.incremental import (
-    _LEVEL_NEW,
     DeviceSpadeState,
+    WorksetTickInfo,
     _slide_epilogue,
     _slide_prologue,
 )
-from repro.core.peel import PeelResultDevice, _run_rounds
+from repro.core.peel import (
+    PeelResultDevice,
+    _compact_workset,
+    _run_rounds,
+    select_bucket,
+)
 from repro.graphstore.structs import DeviceGraph, compact_slots, remove_edges
 
 __all__ = [
@@ -62,10 +70,13 @@ __all__ = [
     "sharded_peel_weights",
     "sharded_bulk_peel",
     "sharded_bulk_peel_warm",
+    "sharded_bulk_peel_warm_workset",
     "init_sharded_state",
     "sharded_insert_and_maintain",
+    "sharded_insert_and_maintain_auto",
     "sharded_delete_and_maintain",
     "sharded_slide_and_maintain",
+    "sharded_slide_and_maintain_auto",
     "sharded_full_refresh",
 ]
 
@@ -133,6 +144,46 @@ class _ShardState(NamedTuple):
     round_: jax.Array
 
 
+def _shard_round(axis, eps, src, dst, c, a, s: _ShardState) -> _ShardState:
+    """One psum-reduced bulk round over per-shard COO arrays — the dist
+    twin of :func:`repro.core.peel._round_step`, shared by the full-buffer
+    and workset shard peels so the two cannot drift.  Vertex-shaped state
+    (``s.w`` etc.) is replicated; edge arrays are a shard's local block
+    (full buffers or a gathered workset alike)."""
+    V = s.w.shape[0]
+    g_cur = s.f / jnp.maximum(s.n_act, 1).astype(jnp.float32)
+    improved = (g_cur > s.best_g) & (s.n_act > 0)
+    best_g = jnp.where(improved, g_cur, s.best_g)
+    best_level = jnp.where(improved, s.round_, s.best_level)
+    thresh = 2.0 * (1.0 + eps) * g_cur
+    peel = s.active & (s.w <= thresh)
+    # f32-drift progress fallback, mirroring core.peel._round_step
+    # (w is replicated, so every shard picks the same vertices)
+    wmin = jnp.min(jnp.where(s.active, s.w, _INF))
+    peel = jnp.where(jnp.any(peel), peel, s.active & (s.w <= wmin))
+    e_ps = peel[src]
+    e_pd = peel[dst]
+    cm = jnp.where(s.edge_alive, c, 0.0)
+    dw_l = jax.ops.segment_sum(
+        jnp.where(e_ps & ~e_pd, cm, 0.0), dst, num_segments=V
+    ) + jax.ops.segment_sum(
+        jnp.where(e_pd & ~e_ps, cm, 0.0), src, num_segments=V
+    )
+    drop_l = jnp.sum(jnp.where(e_ps | e_pd, cm, 0.0))
+    dw, drop = jax.lax.psum((dw_l, drop_l), axis)
+    return _ShardState(
+        w=s.w - dw,
+        active=s.active & ~peel,
+        edge_alive=s.edge_alive & ~(e_ps | e_pd),
+        f=s.f - jnp.sum(jnp.where(peel, a, 0.0)) - drop,
+        n_act=s.n_act - jnp.sum(peel),
+        level=jnp.where(peel, s.round_, s.level),
+        best_g=best_g,
+        best_level=best_level,
+        round_=s.round_ + 1,
+    )
+
+
 def _local_peel_fn(axis: str, V: int, eps: float, max_rounds: int, warm: bool):
     """Build the per-shard peel body.  ``warm`` restricts to the ``keep``
     suffix exactly like :func:`repro.core.peel.bulk_peel_warm`; cold start
@@ -163,41 +214,9 @@ def _local_peel_fn(axis: str, V: int, eps: float, max_rounds: int, warm: bool):
             best_level=jnp.int32(0),
             round_=jnp.int32(0),
         )
-
-        def round_fn(s: _ShardState) -> _ShardState:
-            g_cur = s.f / jnp.maximum(s.n_act, 1).astype(jnp.float32)
-            improved = (g_cur > s.best_g) & (s.n_act > 0)
-            best_g = jnp.where(improved, g_cur, s.best_g)
-            best_level = jnp.where(improved, s.round_, s.best_level)
-            thresh = 2.0 * (1.0 + eps) * g_cur
-            peel = s.active & (s.w <= thresh)
-            # f32-drift progress fallback, mirroring core.peel._bulk_round
-            # (w is replicated, so every shard picks the same vertices)
-            wmin = jnp.min(jnp.where(s.active, s.w, _INF))
-            peel = jnp.where(jnp.any(peel), peel, s.active & (s.w <= wmin))
-            e_ps = peel[src]
-            e_pd = peel[dst]
-            cm = jnp.where(s.edge_alive, c, 0.0)
-            dw_l = jax.ops.segment_sum(
-                jnp.where(e_ps & ~e_pd, cm, 0.0), dst, num_segments=V
-            ) + jax.ops.segment_sum(
-                jnp.where(e_pd & ~e_ps, cm, 0.0), src, num_segments=V
-            )
-            drop_l = jnp.sum(jnp.where(e_ps | e_pd, cm, 0.0))
-            dw, drop = jax.lax.psum((dw_l, drop_l), axis)
-            return _ShardState(
-                w=s.w - dw,
-                active=s.active & ~peel,
-                edge_alive=s.edge_alive & ~(e_ps | e_pd),
-                f=s.f - jnp.sum(jnp.where(peel, a, 0.0)) - drop,
-                n_act=s.n_act - jnp.sum(peel),
-                level=jnp.where(peel, s.round_, s.level),
-                best_g=best_g,
-                best_level=best_level,
-                round_=s.round_ + 1,
-            )
-
-        s = _run_rounds(round_fn, init, max_rounds)
+        s = _run_rounds(
+            partial(_shard_round, axis, eps, src, dst, c, a), init, max_rounds
+        )
         return s.level, s.best_level, s.best_g, s.round_, s.w
 
     return fn
@@ -261,6 +280,119 @@ def sharded_bulk_peel_warm(
     return _sharded_peel(
         g, keep, prior_best_g, mesh, axis, eps, max_rounds, warm=True
     )
+
+
+# ---------------------------------------------------------------------------
+# sharded workset peel (DESIGN.md §8): each shard gathers the affected
+# suffix's LOCAL live edges into a bucket-sized buffer; vertex compaction
+# is replicated math, so every shard agrees on the local id map and the
+# round sequence, and one psum per round reduces the workset deltas.
+# ---------------------------------------------------------------------------
+
+
+def _local_workset_peel_fn(
+    axis: str, V: int, eps: float, max_rounds: int, v_bucket: int, e_bucket: int
+):
+    def fn(src, dst, c, emask, a, vmask, keep, prior_g):
+        # the gather is core.peel._compact_workset verbatim on this shard's
+        # local edge block; vertex compaction is replicated math, so every
+        # shard computes the identical vid/local-id map and the round
+        # sequence cannot diverge
+        live = keep & vmask
+        ws = _compact_workset(src, dst, c, emask, a, live, v_bucket, e_bucket)
+
+        cm0 = jnp.where(ws.alive, ws.c, 0.0)
+        inc = jax.ops.segment_sum(cm0, ws.src, num_segments=v_bucket) + (
+            jax.ops.segment_sum(cm0, ws.dst, num_segments=v_bucket)
+        )
+        inc, e_sum = jax.lax.psum((inc, jnp.sum(cm0)), axis)
+        init = _ShardState(
+            w=ws.a + inc,
+            active=ws.active,
+            edge_alive=ws.alive,
+            f=jnp.sum(ws.a) + e_sum,
+            n_act=jnp.sum(ws.active),
+            level=jnp.full(v_bucket, -1, jnp.int32),
+            best_g=prior_g.astype(jnp.float32),
+            best_level=jnp.int32(0),
+            round_=jnp.int32(0),
+        )
+        s = _run_rounds(
+            partial(_shard_round, axis, eps, ws.src, ws.dst, ws.c, ws.a),
+            init, max_rounds,
+        )
+        # scatter the workset level back to full width (replicated output)
+        level = jnp.full(V, -1, jnp.int32).at[ws.vid].set(s.level, mode="drop")
+        w_full = jnp.zeros(V, jnp.float32).at[ws.vid].set(s.w, mode="drop")
+        return level, s.best_level, s.best_g, s.round_, w_full
+
+    return fn
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "eps", "max_rounds", "v_bucket", "e_bucket"),
+)
+def sharded_bulk_peel_warm_workset(
+    g: DeviceGraph,
+    keep: jax.Array,
+    prior_best_g: jax.Array,
+    mesh: Mesh,
+    axis: str = "data",
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    *,
+    v_bucket: int,
+    e_bucket: int,
+) -> PeelResultDevice:
+    """Edge-sharded twin of :func:`repro.core.peel.bulk_peel_warm_workset`.
+
+    ``e_bucket`` bounds the *per-shard* workset (callers size it from the
+    max local suffix-edge count, :func:`sharded_workset_sizes`).  Matches
+    the single-device workset and the full-buffer warm peel bit-exactly on
+    integer weights: all per-vertex/per-set quantities are the same
+    integer sums, only the reduction is distributed.
+    """
+    _check_divisible(g, mesh, axis)
+    es, rs = P(axis), P()
+    fn = _local_workset_peel_fn(axis, g.n_capacity, eps, max_rounds,
+                                v_bucket, e_bucket)
+    level, best_level, best_g, n_rounds, w = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(es, es, es, es, rs, rs, rs, rs),
+        out_specs=(rs,) * 5,
+        check_rep=False,
+    )(g.src, g.dst, g.c, g.edge_mask, g.a, g.vertex_mask, keep, prior_best_g)
+    return PeelResultDevice(
+        level=level,
+        best_level=best_level,
+        best_g=best_g,
+        n_rounds=n_rounds,
+        order=jnp.zeros(g.n_capacity, jnp.int32),
+        delta=w,
+    )
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis"))
+def sharded_workset_sizes(
+    g: DeviceGraph, keep: jax.Array, mesh: Mesh, axis: str = "data"
+) -> tuple[jax.Array, jax.Array]:
+    """(live suffix vertices, MAX per-shard suffix-induced live edges) —
+    the bucket-selection counts for the sharded workset path."""
+    _check_divisible(g, mesh, axis)
+
+    def fn(src, dst, c, emask, vmask, keep):
+        live = keep & vmask
+        both = live[src] & live[dst] & emask
+        ne = jax.lax.pmax(jnp.sum(both).astype(jnp.int32), axis)
+        return jnp.sum(live).astype(jnp.int32), ne
+
+    es, rs = P(axis), P()
+    return shard_map(
+        fn, mesh=mesh, in_specs=(es, es, es, es, rs, rs), out_specs=(rs, rs),
+        check_rep=False,
+    )(g.src, g.dst, g.c, g.edge_mask, g.vertex_mask, keep)
 
 
 @partial(jax.jit, static_argnames=("mesh", "axis"))
@@ -383,44 +515,19 @@ def sharded_insert_and_maintain(
     One fused device program: sharded append (each shard writes the batch
     entries whose global slot falls in its block) -> affected-suffix
     recovery (replicated) -> sharded warm bulk re-peel -> state merge.
+    The bookkeeping is the single-device ``_slide_prologue`` /
+    ``_slide_epilogue`` with the insert-only static path (no drop mask),
+    exactly as in the core engine, so the two planes cannot drift.
     """
-    g = state.graph
-    _check_divisible(g, mesh, axis)
-    g = _sharded_append(g, state.edge_count, src, dst, c, valid, mesh, axis)
-    n_new = jnp.sum(valid).astype(jnp.int32)
-
-    # affected suffix start (replicated math — level/batch are replicated)
-    lvl_src = jnp.where(valid, state.level[src], _LEVEL_NEW)
-    lvl_dst = jnp.where(valid, state.level[dst], _LEVEL_NEW)
-    r0 = jnp.minimum(jnp.min(lvl_src), jnp.min(lvl_dst))
-    r0 = jnp.where(n_new > 0, r0, _LEVEL_NEW)
-    r0 = jnp.minimum(r0, jnp.int32(2**30))
-    keep = state.level >= r0
-
+    _check_divisible(state.graph, mesh, axis)
+    bk = _slide_prologue(state, None, src, dst, valid)
+    g = _sharded_append(state.graph, state.edge_count, src, dst, c, valid,
+                        mesh, axis)
     res = _sharded_peel(
-        g, keep, state.best_g, mesh, axis, eps, max_rounds, warm=True
+        g, bk.keep, bk.prior_g, mesh, axis, eps, max_rounds, warm=True
     )
-
-    suffix_level = jnp.where(res.level >= 0, res.level, res.n_rounds)
-    new_level = jnp.where(keep, r0 + suffix_level, state.level)
-    improved = res.best_g > state.best_g
-    new_comm = jnp.where(
-        improved,
-        (res.level >= res.best_level) & keep & g.vertex_mask,
-        state.community,
-    )
-    w0 = state.w0
-    cv = jnp.where(valid, c.astype(jnp.float32), 0.0)
-    w0 = w0.at[src].add(cv, mode="drop")
-    w0 = w0.at[dst].add(cv, mode="drop")
-    return DeviceSpadeState(
-        graph=g,
-        level=new_level,
-        best_g=jnp.maximum(res.best_g, state.best_g),
-        community=new_comm,
-        edge_count=state.edge_count + n_new,
-        w0=w0,
-    )
+    return _slide_epilogue(state, g, res, bk, jnp.int32(0), src, dst, c, valid,
+                           with_drops=False)
 
 
 def sharded_delete_and_maintain(
@@ -474,6 +581,138 @@ def sharded_slide_and_maintain(
         g, bk.keep, bk.prior_g, mesh, axis, eps, max_rounds, warm=True
     )
     return _slide_epilogue(state, g, res, bk, n_removed, src, dst, c, valid)
+
+
+# ---------------------------------------------------------------------------
+# sharded workset dispatch (DESIGN.md §8): phase A applies the structural
+# update and counts the affected suffix; the host syncs the two scalars,
+# picks buckets, and dispatches phase B (per-shard workset re-peel, or the
+# full-buffer sharded warm peel on fallback).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis"))
+def _sharded_insert_phase_a(state, src, dst, c, valid, mesh, axis):
+    bk = _slide_prologue(state, None, src, dst, valid)
+    g = _sharded_append(state.graph, state.edge_count, src, dst, c, valid,
+                        mesh, axis)
+    nv, ne = sharded_workset_sizes(g, bk.keep, mesh, axis=axis)
+    return g, bk, jnp.int32(0), nv, ne
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis"))
+def _sharded_slide_phase_a(state, drop, src, dst, c, valid, mesh, axis):
+    bk = _slide_prologue(state, drop, src, dst, valid)
+    g, n_removed = _sharded_remove(state.graph, drop, mesh, axis)
+    g = _sharded_append(g, state.edge_count - n_removed, src, dst, c, valid,
+                        mesh, axis)
+    nv, ne = sharded_workset_sizes(g, bk.keep, mesh, axis=axis)
+    return g, bk, n_removed, nv, ne
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "eps", "max_rounds", "v_bucket",
+                     "e_bucket", "with_drops", "d_bucket"),
+    donate_argnames=("state", "g"),
+)
+def _sharded_phase_b(
+    state, g, bk, n_removed, src, dst, c, valid,
+    mesh, axis,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    v_bucket: int = 0,
+    e_bucket: int = 0,
+    with_drops: bool = True,
+    d_bucket: int = 0,
+):
+    if v_bucket and e_bucket:
+        res = sharded_bulk_peel_warm_workset(
+            g, bk.keep, bk.prior_g, mesh, axis=axis, eps=eps,
+            max_rounds=max_rounds, v_bucket=v_bucket, e_bucket=e_bucket,
+        )
+    else:
+        res = _sharded_peel(
+            g, bk.keep, bk.prior_g, mesh, axis, eps, max_rounds, warm=True
+        )
+    return _slide_epilogue(state, g, res, bk, n_removed, src, dst, c, valid,
+                           with_drops=with_drops, d_bucket=d_bucket)
+
+
+def _sharded_dispatch_phase_b(
+    state, g, bk, n_removed, src, dst, c, valid,
+    nv, ne, mesh, axis, eps, max_rounds, min_bucket, with_drops=True,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    n_cap = state.graph.n_capacity
+    e_local = state.graph.e_capacity // mesh.shape[axis]
+    # the tick's only device->host sync: three scalars, one transfer
+    nv_i, ne_i, nd_i = (int(x) for x in np.asarray(
+        jnp.stack([nv, ne, n_removed])
+    ))
+    bv = select_bucket(nv_i, n_cap, floor=min_bucket)
+    be = select_bucket(ne_i, e_local, floor=min_bucket)
+    if bv is None or be is None:
+        bv = be = 0
+    # statically skip the w0 decrement when nothing was actually dropped,
+    # and compact it through a bucket otherwise (single-device engine ditto)
+    with_drops = with_drops and nd_i > 0
+    bd = 0
+    if with_drops:
+        bd = select_bucket(nd_i, state.graph.e_capacity,
+                           floor=min_bucket) or 0
+    new_state = _sharded_phase_b(
+        state, g, bk, n_removed, src, dst, c, valid, mesh, axis,
+        eps=eps, max_rounds=max_rounds, v_bucket=bv, e_bucket=be,
+        with_drops=with_drops, d_bucket=bd,
+    )
+    return new_state, WorksetTickInfo(nv_i, ne_i, bv, be, not (bv and be))
+
+
+def sharded_insert_and_maintain_auto(
+    state: DeviceSpadeState,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    mesh: Mesh,
+    axis: str = "data",
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    min_bucket: int = 64,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """Edge-sharded twin of
+    :func:`repro.core.incremental.insert_and_maintain_auto`."""
+    g, bk, n_removed, nv, ne = _sharded_insert_phase_a(
+        state, src, dst, c, valid, mesh, axis
+    )
+    return _sharded_dispatch_phase_b(
+        state, g, bk, n_removed, src, dst, c, valid, nv, ne, mesh, axis,
+        eps, max_rounds, min_bucket, with_drops=False,
+    )
+
+
+def sharded_slide_and_maintain_auto(
+    state: DeviceSpadeState,
+    drop: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    mesh: Mesh,
+    axis: str = "data",
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    min_bucket: int = 64,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """Edge-sharded twin of
+    :func:`repro.core.incremental.slide_and_maintain_auto`."""
+    g, bk, n_removed, nv, ne = _sharded_slide_phase_a(
+        state, drop, src, dst, c, valid, mesh, axis
+    )
+    return _sharded_dispatch_phase_b(
+        state, g, bk, n_removed, src, dst, c, valid, nv, ne, mesh, axis,
+        eps, max_rounds, min_bucket,
+    )
 
 
 @partial(jax.jit, static_argnames=("mesh", "axis", "eps"))

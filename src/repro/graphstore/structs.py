@@ -155,28 +155,41 @@ def remove_edges(g: DeviceGraph, drop: jax.Array) -> tuple[DeviceGraph, jax.Arra
     """Tombstone the slots where ``drop`` holds and compact the survivors.
 
     The k-th surviving edge (in slot order) moves to slot ``k`` — the same
-    ``compact_slots`` math the append path uses, so insertion order is
-    preserved and the live region stays a prefix.  Sliding-window callers
-    exploit this: after every expiry the oldest batch is again the first
-    ``count`` slots.  Freed slots revert to the standard inert padding
-    (``src = dst = n_capacity - 1``, ``c = 0``, mask False).
+    slot semantics as ``compact_slots`` on the append path, so insertion
+    order is preserved and the live region stays a prefix.  Sliding-window
+    callers exploit this: after every expiry the oldest batch is again the
+    first ``count`` slots.  Freed slots revert to the standard inert
+    padding (``src = dst = n_capacity - 1``, ``c = 0``, mask False).
+
+    The compaction runs as a **gather**: output slot ``k`` pulls the k-th
+    survivor, located by binary search over the survivor-count prefix sum
+    (``searchsorted``).  The scatter formulation (full-buffer ``.at[].set``
+    with cumsum slots) was tried and REFUTED: XLA CPU scatters cost ~4x a
+    sorted-search gather at 400k edges, and this pass sits on the serving
+    tick's critical path.  The compacted mask is just ``slot < survivors``
+    — no scatter at all.
 
     Returns ``(graph, n_removed)`` with ``n_removed`` the number of *live*
     edges dropped (tombstoning an already-dead slot is a no-op).
     """
     pad = jnp.int32(g.n_capacity - 1)
-    survive = g.edge_mask & ~drop
-    idx, ok = compact_slots(jnp.int32(0), survive, g.e_capacity)
-    idx = jnp.where(ok, idx, g.e_capacity)  # dead lanes scatter out of bounds
     E = g.e_capacity
+    survive = g.edge_mask & ~drop
+    csum = jnp.cumsum(survive.astype(jnp.int32))
+    n_survive = csum[E - 1]
+    # slot k (0-based) takes the (k+1)-th survivor: the first index whose
+    # running survivor count reaches k+1
+    idx = jnp.searchsorted(csum, jnp.arange(1, E + 1, dtype=jnp.int32))
+    live = jnp.arange(E, dtype=jnp.int32) < n_survive
+    idx = jnp.where(live, idx, E - 1)  # clamp dead lanes (values masked below)
     n_removed = jnp.sum(g.edge_mask & drop).astype(jnp.int32)
     return (
         dataclasses.replace(
             g,
-            src=jnp.full(E, pad).at[idx].set(g.src, mode="drop"),
-            dst=jnp.full(E, pad).at[idx].set(g.dst, mode="drop"),
-            c=jnp.zeros(E, jnp.float32).at[idx].set(g.c, mode="drop"),
-            edge_mask=jnp.zeros(E, bool).at[idx].set(g.edge_mask, mode="drop"),
+            src=jnp.where(live, g.src[idx], pad),
+            dst=jnp.where(live, g.dst[idx], pad),
+            c=jnp.where(live, g.c[idx], 0.0),
+            edge_mask=live,
         ),
         n_removed,
     )

@@ -6,11 +6,23 @@ through the TPU-native engine (``insert_and_maintain``), FD/DW/DG
 weighting on device, benign/urgent statistics, periodic exact refresh, and
 capacity management.  On a real cluster each tick is one device program
 under the production mesh; here it runs on the CPU backend.
+
+With ``workset=True`` every tick runs through the affected-area workset
+engine (DESIGN.md §8): phase A applies the structural update and counts
+the affected suffix, the host picks power-of-two buckets from those two
+scalars, and phase B re-peels only the gathered workset — falling back to
+the full-buffer warm peel when the suffix exceeds the largest bucket.
+Per-tick telemetry (workset vs fallback, bucket high-water marks) lands in
+the report.
+
+Per-tick statistics stay on device: benign counts accumulate in a device
+scalar and the ever-detected vertex set in a device bool vector, drained
+once at shutdown — no device->host round-trip inside the serving loop
+beyond the workset engine's two count scalars.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass
 from functools import partial
@@ -19,21 +31,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.device_metrics import dg_weights, dw_weights, fd_batch_weights
+from repro.core.device_metrics import (
+    dg_weights,
+    dw_weights,
+    fd_batch_weights,
+    seed_base_weights,
+)
 from repro.core.incremental import (
     DeviceSpadeState,
     benign_mask,
     full_refresh,
     init_state,
     insert_and_maintain,
+    insert_and_maintain_auto,
     slide_and_maintain,
+    slide_and_maintain_auto,
 )
 from repro.dist.graph import (
     init_sharded_state,
     shard_graph,
     sharded_full_refresh,
     sharded_insert_and_maintain,
+    sharded_insert_and_maintain_auto,
     sharded_slide_and_maintain,
+    sharded_slide_and_maintain_auto,
 )
 from repro.graphstore.generators import TxStream
 from repro.graphstore.structs import device_graph_from_coo
@@ -54,6 +75,25 @@ class DeviceServiceReport:
     window_ticks: int = 0  # 0 = unbounded (insert-only) service
     n_expired_edges: int = 0  # edges that slid out of the window
     live_edges: int = 0  # edges resident at shutdown
+    # workset-engine telemetry (zeros when workset=False).  Edge counts
+    # follow WorksetTickInfo semantics: global on a single device, max
+    # PER-SHARD under a mesh — not comparable across the two modes.
+    n_workset_ticks: int = 0
+    n_fallback_ticks: int = 0
+    max_suffix_edges: int = 0  # high-water mark of the affected suffix
+    max_e_bucket: int = 0  # largest edge bucket dispatched
+
+
+@jax.jit
+def _accum_benign(acc, state: DeviceSpadeState, src, dst, c, valid):
+    """Device-side benign counter (Def 4.1 against the PRE-tick state);
+    padded tail lanes of a partial tick must not count toward stats."""
+    return acc + jnp.sum(benign_mask(state, src, dst, c) & valid)
+
+
+@jax.jit
+def _accum_detected(ever, community):
+    return ever | community
 
 
 def run_device_service(
@@ -67,6 +107,8 @@ def run_device_service(
     mesh: jax.sharding.Mesh | None = None,
     shard_axis: str = "data",
     window_ticks: int = 0,
+    workset: bool = False,
+    min_bucket: int = 64,
 ) -> DeviceServiceReport:
     """Replay ``stream`` through the device engine in fixed-size ticks.
 
@@ -85,7 +127,12 @@ def run_device_service(
     survivors to the buffer prefix, the oldest resident batch always
     occupies the slots right after the base graph and the edge capacity
     is bounded by ``m_base + (N+1) * batch_edges`` regardless of stream
-    length."""
+    length.
+
+    With ``workset=True`` ticks dispatch through the workset engine
+    (bit-identical on integer weights; automatic full-buffer fallback),
+    turning steady-state per-round work from O(E_capacity) into
+    O(|affected suffix|)."""
     n = stream.n_vertices
     m_base = stream.base_src.shape[0]
     m_total = m_base + stream.inc_src.shape[0]
@@ -94,14 +141,10 @@ def run_device_service(
     else:
         e_cap = int(m_total * capacity_slack) + batch_edges
 
-    if metric == "DG":
-        base_w = np.ones(m_base, np.float32)
-    else:
-        base_w = stream.base_amt.astype(np.float32)
-    in_deg = np.zeros(n, np.int64)
-    np.add.at(in_deg, stream.base_dst, 1)
-    if metric == "FD":
-        base_w = (1.0 / np.log(in_deg[stream.base_dst] + 5.0)).astype(np.float32)
+    # one shared definition of the FD/DW/DG base seeding (dyadic-snapped)
+    base_w, in_deg = seed_base_weights(
+        metric, stream.base_src, stream.base_dst, stream.base_amt, n
+    )
 
     g = device_graph_from_coo(
         n, stream.base_src, stream.base_dst, base_w,
@@ -110,26 +153,42 @@ def run_device_service(
     if mesh is not None:
         g = shard_graph(g, mesh, axis=shard_axis)
         state = init_sharded_state(g, mesh, axis=shard_axis, eps=eps)
-        maintain = partial(sharded_insert_and_maintain, mesh=mesh, axis=shard_axis)
         refresh = partial(sharded_full_refresh, mesh=mesh, axis=shard_axis)
-        slide = partial(sharded_slide_and_maintain, mesh=mesh, axis=shard_axis)
+        if workset:
+            maintain = partial(sharded_insert_and_maintain_auto, mesh=mesh,
+                               axis=shard_axis, min_bucket=min_bucket)
+            slide = partial(sharded_slide_and_maintain_auto, mesh=mesh,
+                            axis=shard_axis, min_bucket=min_bucket)
+        else:
+            maintain = partial(sharded_insert_and_maintain, mesh=mesh,
+                               axis=shard_axis)
+            slide = partial(sharded_slide_and_maintain, mesh=mesh,
+                            axis=shard_axis)
     else:
         state = init_state(g, eps=eps)
-        maintain = insert_and_maintain
         refresh = full_refresh
-        slide = slide_and_maintain
-    deg_dev = jnp.zeros(g.n_capacity, jnp.int32).at[
-        jnp.asarray(stream.base_dst)
-    ].add(1)
+        if workset:
+            maintain = partial(insert_and_maintain_auto, min_bucket=min_bucket)
+            slide = partial(slide_and_maintain_auto, min_bucket=min_bucket)
+        else:
+            maintain = insert_and_maintain
+            slide = slide_and_maintain
+    deg_dev = jnp.asarray(in_deg, jnp.int32)
+    if deg_dev.shape[0] < g.n_capacity:
+        deg_dev = jnp.pad(deg_dev, (0, g.n_capacity - deg_dev.shape[0]))
 
     n_inc = stream.inc_src.shape[0]
     n_ticks = 0
     n_refresh = 0
-    benign_total = 0
     n_expired = 0
     t_total = 0.0
+    n_workset = 0
+    n_fallback = 0
+    max_suffix_edges = 0
+    max_e_bucket = 0
     ring: list[int] = []  # per-tick resident edge counts, oldest first
-    detected: set[int] = set()  # windowed mode: vertices ever in S^P
+    benign_acc = jnp.int32(0)  # device accumulator, drained at shutdown
+    ever_detected = jnp.zeros(g.n_capacity, bool)  # vertices ever in S^P
     slot_ids = jnp.arange(g.e_capacity, dtype=jnp.int32)
     for i in range(0, n_inc, batch_edges):
         j = min(i + batch_edges, n_inc)
@@ -147,39 +206,49 @@ def run_device_service(
             w = dg_weights(jnp.asarray(amt, jnp.float32))
         else:
             w = dw_weights(jnp.asarray(amt, jnp.float32))
-        # padded tail lanes of a partial tick must not count toward stats
-        benign_total += int(np.asarray(benign_mask(state, bs_d, bd_d, w))[valid].sum())
+        benign_acc = _accum_benign(benign_acc, state, bs_d, bd_d, w, valid_d)
         t0 = time.perf_counter()
+        info = None
         if window_ticks and len(ring) >= window_ticks:
             # fused tick: expire the batch sliding out + insert the new one
-            # in a single device program (one warm re-peel).  After
-            # compaction the oldest resident batch always sits right after
-            # the base graph.
+            # with a single warm re-peel.  After compaction the oldest
+            # resident batch always sits right after the base graph.
             cnt0 = ring.pop(0)
             drop = (slot_ids >= m_base) & (slot_ids < m_base + cnt0)
-            state = slide(
+            out = slide(
                 state, drop, bs_d, bd_d, w.astype(jnp.float32), valid_d,
                 eps=eps, max_rounds=max_rounds,
             )
+            state, info = out if workset else (out, None)
             n_expired += cnt0
         else:
-            state = maintain(
+            out = maintain(
                 state, bs_d, bd_d, w.astype(jnp.float32), valid_d,
                 eps=eps, max_rounds=max_rounds,
             )
+            state, info = out if workset else (out, None)
         jax.block_until_ready(state.best_g)
         t_total += time.perf_counter() - t0
+        if info is not None:
+            n_fallback += info.fallback
+            n_workset += not info.fallback
+            max_suffix_edges = max(max_suffix_edges, info.n_suffix_edges)
+            max_e_bucket = max(max_e_bucket, info.e_bucket)
         if window_ticks:
             ring.append(int(valid.sum()))
             # a windowed community is transient by design (the evidence
-            # expires); recall is therefore "ever detected while resident"
-            detected.update(np.where(np.asarray(state.community))[0].tolist())
+            # expires); recall is therefore "ever detected while resident",
+            # tracked as a device bool vector and drained once at shutdown
+            ever_detected = _accum_detected(ever_detected, state.community)
         n_ticks += 1
         if refresh_every and n_ticks % refresh_every == 0:
             state = refresh(state, eps=eps)
             n_refresh += 1
 
-    comm = set(np.where(np.asarray(state.community))[0].tolist()) | detected
+    # drain the device-resident stats once, after the loop
+    benign_total = int(benign_acc)
+    detected = np.where(np.asarray(ever_detected))[0].tolist()
+    comm = set(np.where(np.asarray(state.community))[0].tolist()) | set(detected)
     fraud = set(stream.fraud_block.tolist())
     recall = len(fraud & comm) / len(fraud) if fraud else 1.0
     return DeviceServiceReport(
@@ -194,4 +263,8 @@ def run_device_service(
         window_ticks=window_ticks,
         n_expired_edges=n_expired,
         live_edges=int(state.edge_count),
+        n_workset_ticks=n_workset,
+        n_fallback_ticks=n_fallback,
+        max_suffix_edges=max_suffix_edges,
+        max_e_bucket=max_e_bucket,
     )

@@ -83,3 +83,21 @@ def test_device_service_window_capacity_is_stream_length_independent():
     m_base = stream.base_src.shape[0]
     assert rep.live_edges <= m_base + 128
     assert rep.n_ticks == -(-stream.inc_src.shape[0] // 128)
+
+
+def test_device_service_workset_matches_full_buffer():
+    """Workset-engine serving (DG: unit weights, order-robust sums) must
+    reproduce the full-buffer service exactly, and the bucket/fallback
+    telemetry must account for every tick."""
+    stream = make_transaction_stream(n=1500, m=8000, seed=15)
+    kw = dict(metric="DG", batch_edges=256, max_rounds=10, window_ticks=2)
+    rep_full = run_device_service(stream, **kw)
+    rep_ws = run_device_service(stream, workset=True, min_bucket=64, **kw)
+    assert rep_ws.final_g == rep_full.final_g
+    assert rep_ws.fraud_recall == rep_full.fraud_recall
+    assert rep_ws.benign_fraction == rep_full.benign_fraction
+    assert rep_ws.live_edges == rep_full.live_edges
+    assert rep_ws.n_workset_ticks + rep_ws.n_fallback_ticks == rep_ws.n_ticks
+    assert rep_ws.max_suffix_edges > 0
+    # the full-buffer service reports no workset telemetry
+    assert rep_full.n_workset_ticks == rep_full.n_fallback_ticks == 0

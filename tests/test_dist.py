@@ -18,6 +18,8 @@ from repro.core.incremental import (
     full_refresh,
     init_state,
     insert_and_maintain,
+    insert_and_maintain_auto,
+    slide_and_maintain_auto,
 )
 from repro.core.peel import bulk_peel
 from repro.dist.compression import ef_compress_tree
@@ -28,7 +30,9 @@ from repro.dist.graph import (
     sharded_delete_and_maintain,
     sharded_full_refresh,
     sharded_insert_and_maintain,
+    sharded_insert_and_maintain_auto,
     sharded_peel_weights,
+    sharded_slide_and_maintain_auto,
 )
 from repro.dist.sharding import (
     AxisEnv,
@@ -291,6 +295,70 @@ def test_device_service_sharded_windowed_matches_single():
     assert repn.n_expired_edges == rep1.n_expired_edges
     m_base = stream.base_src.shape[0]
     assert rep1.live_edges <= m_base + 3 * 128
+
+
+@multi_device
+def test_sharded_workset_auto_matches_single_device():
+    """Workset ticks on the mesh: per-shard local gather + psum'd workset
+    rounds track both the single-device workset engine and the fused
+    full-buffer engine bit-for-bit (integer weights), through hot
+    (workset) and cold (fallback) ticks alike."""
+    n = 200
+    g = random_graph(7, n=n)
+    mesh = data_mesh(len(jax.devices()))
+    rng = np.random.default_rng(8)
+    st_ref = init_state(g, eps=0.1)
+    st_sh = init_sharded_state(shard_graph(g, mesh), mesh, eps=0.1)
+    lv = np.where(np.asarray(g.vertex_mask), np.asarray(st_ref.level), -1)
+    hot = np.argsort(lv)[-24:]
+    E = st_ref.graph.e_capacity
+    took_workset = False
+    for step in range(4):
+        B = 16
+        pool = hot if step % 2 == 0 else np.arange(n)  # hot and cold ticks
+        bs = jnp.asarray(rng.choice(pool, B), jnp.int32)
+        bd = jnp.asarray(rng.choice(pool, B), jnp.int32)
+        bc = jnp.asarray(rng.integers(1, 4, B), jnp.float32)
+        valid = bs != bd
+        if step == 3:  # one slide tick through the sharded workset path
+            drop = jnp.zeros(E, bool).at[jnp.arange(3)].set(True)
+            drop_sh = jnp.zeros(st_sh.graph.e_capacity, bool).at[
+                jnp.arange(3)
+            ].set(True)
+            st_ref, i1 = slide_and_maintain_auto(
+                st_ref, drop, bs, bd, bc, valid, eps=0.1, min_bucket=8
+            )
+            st_sh, i2 = sharded_slide_and_maintain_auto(
+                st_sh, drop_sh, bs, bd, bc, valid, mesh=mesh, eps=0.1,
+                min_bucket=8,
+            )
+        else:
+            st_ref, i1 = insert_and_maintain_auto(
+                st_ref, bs, bd, bc, valid, eps=0.1, min_bucket=8
+            )
+            st_sh, i2 = sharded_insert_and_maintain_auto(
+                st_sh, bs, bd, bc, valid, mesh=mesh, eps=0.1, min_bucket=8
+            )
+        # the suffix is engine-independent; bucket/fallback choices may
+        # differ (the sharded engine buckets the max PER-SHARD edge count)
+        # yet the results below must still agree bit-for-bit
+        assert i1.n_suffix_vertices == i2.n_suffix_vertices, step
+        took_workset |= not i1.fallback and not i2.fallback
+        assert float(st_sh.best_g) == float(st_ref.best_g), step
+        assert int(st_sh.edge_count) == int(st_ref.edge_count)
+        np.testing.assert_array_equal(
+            np.asarray(st_sh.level), np.asarray(st_ref.level)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(st_sh.community), np.asarray(st_ref.community)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(st_sh.w0), np.asarray(st_ref.w0)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(st_sh.graph.src)[:E], np.asarray(st_ref.graph.src)
+        )
+    assert took_workset  # the hot ticks must actually exercise the workset
 
 
 @multi_device

@@ -172,3 +172,38 @@ def test_peel_round_consistent_with_bulk_peel_semantics():
     np.testing.assert_array_equal(np.asarray(peeled), peeled_ref)
     np.testing.assert_allclose(np.asarray(w2), np.asarray(nxt.w), rtol=1e-5)
     np.testing.assert_array_equal(np.asarray(active2), np.asarray(nxt.active))
+
+
+def test_bulk_peel_kernel_wired_round_parity():
+    """Satellite check for the kernel wiring: ``use_kernel=True`` routes
+    every round's elementwise update through ``peel_round`` (Pallas on
+    TPU, pure-jnp reference elsewhere) and must reproduce the plain-jnp
+    round bit-for-bit on integer weights — cold peel, warm suffix re-peel,
+    and a max_rounds cutoff alike."""
+    from repro.core.peel import bulk_peel, bulk_peel_warm
+    from repro.graphstore.structs import device_graph_from_coo
+
+    rng = np.random.default_rng(11)
+    n, m = 150, 500
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    c = rng.integers(1, 6, src.shape[0]).astype(np.float32)
+    a = rng.integers(0, 3, n).astype(np.float32)
+    g = device_graph_from_coo(n, src, dst, c, a)
+
+    for kwargs in ({}, {"max_rounds": 3}):
+        ref = bulk_peel(g, eps=0.1, **kwargs)
+        got = bulk_peel(g, eps=0.1, use_kernel=True, **kwargs)
+        np.testing.assert_array_equal(np.asarray(got.level), np.asarray(ref.level))
+        assert float(got.best_g) == float(ref.best_g)
+        assert int(got.best_level) == int(ref.best_level)
+        assert int(got.n_rounds) == int(ref.n_rounds)
+
+    keep_mask = jnp.asarray(np.asarray(ref.level) >= 2)
+    wref = bulk_peel_warm(g, keep_mask, prior_best_g=ref.best_g, eps=0.1)
+    wgot = bulk_peel_warm(g, keep_mask, prior_best_g=ref.best_g, eps=0.1,
+                          use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(wgot.level), np.asarray(wref.level))
+    assert float(wgot.best_g) == float(wref.best_g)

@@ -43,9 +43,17 @@ from repro.core.incremental import (
     full_refresh,
     init_state,
     insert_and_maintain,
+    insert_and_maintain_auto,
     slide_and_maintain,
+    slide_and_maintain_auto,
 )
-from repro.core.peel import bulk_peel
+from repro.core.peel import (
+    bulk_peel,
+    bulk_peel_warm,
+    bulk_peel_warm_workset,
+    select_bucket,
+    workset_sizes,
+)
 from repro.core.reference import (
     AdjGraph,
     delete_edge,
@@ -168,19 +176,46 @@ def test_property_spade_grouping_flush_interleaving(base, batches, metric):
 # ---------------------------------------------------------------------------
 
 
+def assert_states_bit_identical(a, b, tag=""):
+    """Full-state bit equality (integer weights keep every sum exact)."""
+    for f in ("level", "best_g", "community", "edge_count", "w0"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{tag}:{f}",
+        )
+    for f in ("src", "dst", "c", "edge_mask"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.graph, f)), np.asarray(getattr(b.graph, f)),
+            err_msg=f"{tag}:graph.{f}",
+        )
+
+
 def run_window_differential(base, ticks, window):
     """Replay ``ticks`` batches through the device engine with an
     N-tick sliding window, mirroring the service's slot bookkeeping, and
-    check the full invariant set against host oracles after every tick."""
+    check the full invariant set against host oracles after every tick.
+
+    A twin state runs every tick through the **workset engine**
+    (``*_and_maintain_auto``: gather the affected suffix into bucketed
+    buffers, re-peel the workset only, scatter back — with automatic
+    full-buffer fallback) and must stay bit-identical to the fused
+    full-buffer path; the tiny ``min_bucket`` makes the replay cross
+    bucket boundaries and exercise workset and fallback ticks alike."""
     B = 4  # fixed padded batch size -> stable jit shapes
     src = np.array([e[0] for e in base], np.int64)
     dst = np.array([e[1] for e in base], np.int64)
     c = np.array([e[2] for e in base], np.float32)
-    g = device_graph_from_coo(N, src, dst, c, n_capacity=V_CAP, e_capacity=E_CAP)
-    state = init_state(g, eps=EPS)
+    mk = lambda: device_graph_from_coo(
+        N, src, dst, c, n_capacity=V_CAP, e_capacity=E_CAP
+    )
+    state = init_state(mk(), eps=EPS)
+    state_ws = init_state(mk(), eps=EPS)  # independent buffers (donation)
     m_base = len(base)
     ring: list[list[tuple[int, int, int]]] = []
     slot_ids = jnp.arange(E_CAP, dtype=jnp.int32)
+    zi = jnp.zeros(B, jnp.int32)
+    zf = jnp.zeros(B, jnp.float32)
+    zv = jnp.zeros(B, bool)
 
     for t, batch in enumerate(ticks):
         n_exp = len(ring.pop(0)) if len(ring) >= window else 0
@@ -197,9 +232,19 @@ def run_window_differential(base, ticks, window):
         # maintenance paths face the same oracle
         if t % 2 == 0:
             state = slide_and_maintain(state, drop, bs, bd, bc, valid, eps=EPS)
+            state_ws, _ = slide_and_maintain_auto(
+                state_ws, drop, bs, bd, bc, valid, eps=EPS, min_bucket=4
+            )
         else:
             state = delete_and_maintain(state, drop, eps=EPS)
             state = insert_and_maintain(state, bs, bd, bc, valid, eps=EPS)
+            state_ws, _ = slide_and_maintain_auto(  # pure-deletion twin
+                state_ws, drop, zi, zi, zf, zv, eps=EPS, min_bucket=4
+            )
+            state_ws, _ = insert_and_maintain_auto(
+                state_ws, bs, bd, bc, valid, eps=EPS, min_bucket=4
+            )
+        assert_states_bit_identical(state, state_ws, tag=f"tick{t}")
         ring.append(list(batch))
 
         mirror = list(base) + [e for b in ring for e in b]
@@ -268,3 +313,112 @@ def test_window_replay_seeded(seed):
     state = run_window_differential(base, ticks, window=2)
     # window bound: only base + at most 2 ticks of <=4 edges remain
     assert int(state.edge_count) <= len(base) + 2 * 4
+
+
+# ---------------------------------------------------------------------------
+# workset warm peel: bit-parity across bucket-boundary suffix sizes
+# ---------------------------------------------------------------------------
+
+FLOOR = 8  # tiny bucket floor so the boundaries are cheap to cross
+
+
+def _boundary_graph():
+    """Integer-weight graph big enough for non-trivial suffixes."""
+    rng = np.random.default_rng(77)
+    n, m = 120, 500
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    c = rng.integers(1, 6, keep.sum()).astype(np.float32)
+    return device_graph_from_coo(
+        n, src[keep], dst[keep], c, n_capacity=128, e_capacity=1024
+    )
+
+
+@pytest.mark.parametrize("kn", [0, 1, FLOOR - 1, FLOOR, FLOOR + 1, 40])
+def test_workset_warm_peel_bucket_boundaries(kn):
+    """Suffix sizes straddling a bucket boundary (empty, 1, bucket-1,
+    bucket, bucket+1, several buckets): the workset warm peel must match
+    the full-buffer warm peel bit-for-bit on integer weights — level (on
+    the kept suffix and as the full scattered vector), best density,
+    best level, and round count."""
+    g = _boundary_graph()
+    res0 = bulk_peel(g, eps=EPS)
+    lv = np.where(np.asarray(g.vertex_mask), np.asarray(res0.level), -1)
+    top = np.argsort(lv)[-kn:] if kn else np.empty(0, np.int64)
+    keep = jnp.zeros(g.n_capacity, bool).at[jnp.asarray(top, jnp.int32)].set(
+        True, mode="drop"
+    )
+    nv, ne = workset_sizes(g, keep)
+    bv = select_bucket(int(nv), g.n_capacity, floor=FLOOR)
+    be = select_bucket(int(ne), g.e_capacity, floor=FLOOR)
+    assert bv is not None and be is not None
+    full = bulk_peel_warm(g, keep, prior_best_g=res0.best_g, eps=EPS)
+    ws = bulk_peel_warm_workset(
+        g, keep, prior_best_g=res0.best_g, eps=EPS, v_bucket=bv, e_bucket=be
+    )
+    np.testing.assert_array_equal(np.asarray(full.level), np.asarray(ws.level))
+    assert float(full.best_g) == float(ws.best_g)
+    assert int(full.best_level) == int(ws.best_level)
+    assert int(full.n_rounds) == int(ws.n_rounds)
+
+
+def test_select_bucket_ladder_and_fallback_threshold():
+    """The ladder rounds up to powers of two from the floor; counts above
+    the largest bucket (largest power of two <= capacity/2) return None."""
+    assert select_bucket(0, 1024, floor=8) == 8
+    assert select_bucket(1, 1024, floor=8) == 8
+    assert select_bucket(8, 1024, floor=8) == 8
+    assert select_bucket(9, 1024, floor=8) == 16
+    assert select_bucket(511, 1024, floor=8) == 512
+    assert select_bucket(512, 1024, floor=8) == 512  # largest bucket
+    assert select_bucket(513, 1024, floor=8) is None  # > largest -> fallback
+    with pytest.raises(ValueError):
+        select_bucket(-1, 1024)
+
+
+def test_auto_dispatch_falls_back_beyond_largest_bucket():
+    """A batch touching level-0 vertices drags the whole graph into the
+    suffix: the auto engine must take the full-buffer fallback and still
+    match the fused path bit-for-bit."""
+    g1, g2 = _boundary_graph(), _boundary_graph()
+    s_full = init_state(g1, eps=EPS)
+    s_auto = init_state(g2, eps=EPS)
+    lv = np.where(np.asarray(g1.vertex_mask), np.asarray(s_full.level), 99)
+    cold = np.argsort(lv)[:8]  # lowest-level endpoints -> maximal suffix
+    bs = jnp.asarray(cold[:4], jnp.int32)
+    bd = jnp.asarray(cold[4:], jnp.int32)
+    bc = jnp.ones(4, jnp.float32)
+    valid = bs != bd
+    s_full = insert_and_maintain(s_full, bs, bd, bc, valid, eps=EPS)
+    s_auto, info = insert_and_maintain_auto(
+        s_auto, bs, bd, bc, valid, eps=EPS, min_bucket=FLOOR
+    )
+    assert info.fallback
+    assert info.v_bucket == 0 and info.e_bucket == 0
+    # the suffix swallowed (nearly) the whole vertex set, past the largest
+    # vertex bucket (largest power of two <= n_capacity/2)
+    assert info.n_suffix_vertices > g1.n_capacity // 2
+    assert_states_bit_identical(s_full, s_auto, tag="fallback")
+
+
+def test_auto_dispatch_hot_suffix_takes_workset_path():
+    """A batch confined to the highest-level vertices keeps the suffix
+    small: the auto engine must take the workset path (no fallback) and
+    match the fused path bit-for-bit."""
+    g1, g2 = _boundary_graph(), _boundary_graph()
+    s_full = init_state(g1, eps=EPS)
+    s_auto = init_state(g2, eps=EPS)
+    lv = np.where(np.asarray(g1.vertex_mask), np.asarray(s_full.level), -1)
+    hot = np.argsort(lv)[-8:]
+    bs = jnp.asarray(hot[:4], jnp.int32)
+    bd = jnp.asarray(hot[4:], jnp.int32)
+    bc = jnp.ones(4, jnp.float32)
+    valid = bs != bd
+    s_full = insert_and_maintain(s_full, bs, bd, bc, valid, eps=EPS)
+    s_auto, info = insert_and_maintain_auto(
+        s_auto, bs, bd, bc, valid, eps=EPS, min_bucket=FLOOR
+    )
+    assert not info.fallback
+    assert info.e_bucket >= FLOOR
+    assert_states_bit_identical(s_full, s_auto, tag="hot")
