@@ -28,7 +28,7 @@ from repro.core.metrics import make_metric
 from repro.core.reference import AdjGraph, detect, insert_edges, static_peel
 from repro.core.spade import Spade
 from repro.graphstore.generators import make_transaction_stream
-from repro.serve.service import run_service
+from repro.serve import EngineSpec, SpadeService
 
 Row = tuple[str, float, float]
 
@@ -103,8 +103,9 @@ def bench_prevention(seed=2) -> list[Row]:
     rows: list[Row] = []
     for grouping in (False, True):
         stream = make_transaction_stream(n=8000, m=40000, seed=seed)
-        rep = run_service(stream, metric="DW", edge_grouping=grouping,
-                          batch_size=1, flush_every=0.5)
+        rep = SpadeService("DW", EngineSpec(
+            plane="host", grouping=grouping, batch_edges=1, flush_every=0.5,
+        )).run(stream)
         tag = "grouping" if grouping else "batch1"
         rows.append((f"fig9a_prevention_{tag}", rep.mean_us_per_edge,
                      rep.prevention_ratio if rep.prevention_ratio is not None else -1.0))

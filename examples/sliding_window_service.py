@@ -14,7 +14,7 @@ the device plane is differential-tested against).
 
 from repro.core import Spade
 from repro.graphstore.generators import make_transaction_stream
-from repro.serve.device_service import run_device_service
+from repro.serve import EngineSpec, SpadeService
 
 stream = make_transaction_stream(n=5000, m=25000, seed=12)
 m_base = stream.base_src.shape[0]
@@ -23,9 +23,9 @@ print(f"{'mode':<12} {'recall':>7} {'final_g':>10} {'live_edges':>11} "
       f"{'expired':>8} {'ms/tick':>8} {'ws/fb':>7}")
 for label, window, ws in [("unbounded", 0, False), ("window-16", 16, False),
                           ("window-4", 4, False), ("workset-4", 4, True)]:
-    rep = run_device_service(stream, metric="DW", batch_edges=512,
-                             max_rounds=20, refresh_every=16,
-                             window_ticks=window, workset=ws)
+    spec = EngineSpec(batch_edges=512, max_rounds=20, refresh_every=16,
+                      window_ticks=window, workset=ws)
+    rep = SpadeService("DW", spec).run(stream)
     print(f"{label:<12} {rep.fraud_recall:>7.2f} {rep.final_g:>10.1f} "
           f"{rep.live_edges:>11} {rep.n_expired_edges:>8} "
           f"{1e3 * rep.mean_tick_seconds:>8.1f} "

@@ -7,18 +7,18 @@ every metric and batching policy.
 """
 
 from repro.graphstore.generators import make_transaction_stream
-from repro.serve.service import run_service
+from repro.serve import EngineSpec, SpadeService
 
 print(f"{'metric':<6} {'policy':<12} {'us/edge':>9} {'reorders':>9} "
       f"{'recall':>7} {'prevention':>11} {'latency_s':>10}")
 for metric in ("DG", "DW", "FD"):
     for policy, kwargs in [
-        ("batch-1", dict(edge_grouping=False, batch_size=1)),
-        ("batch-100", dict(edge_grouping=False, batch_size=100)),
-        ("grouping", dict(edge_grouping=True, batch_size=1, flush_every=0.5)),
+        ("batch-1", dict(grouping=False, batch_edges=1)),
+        ("batch-100", dict(grouping=False, batch_edges=100)),
+        ("grouping", dict(grouping=True, batch_edges=1, flush_every=0.5)),
     ]:
         stream = make_transaction_stream(n=8000, m=40000, seed=11)
-        rep = run_service(stream, metric=metric, **kwargs)
+        rep = SpadeService(metric, EngineSpec(plane="host", **kwargs)).run(stream)
         print(f"{metric:<6} {policy:<12} {rep.mean_us_per_edge:>9.1f} "
               f"{rep.n_reorders:>9} {rep.fraud_recall:>7.2f} "
               f"{str(rep.prevention_ratio and round(rep.prevention_ratio, 3)):>11} "

@@ -1,0 +1,20 @@
+"""Warning categories for the repro package.
+
+Kept import-light on purpose: ``python -W error::repro._warnings.SpadeDeprecationWarning``
+resolves the category at interpreter start, before jax is importable cheaply,
+so this module must not pull in anything heavy.
+"""
+
+__all__ = ["SpadeDeprecationWarning"]
+
+
+class SpadeDeprecationWarning(DeprecationWarning):
+    """Raised by the legacy string/flag entrypoints (``metric: str``
+    parameters, ``run_service``/``run_device_service``) that the
+    ``SuspSemantics`` + ``SpadeService`` API replaces.
+
+    Deprecation policy: the shims stay source-compatible for existing
+    callers and tests; first-party code (examples, benchmarks, the CLI)
+    must not trigger them — CI's example-smoke lane runs with this
+    category escalated to an error.
+    """

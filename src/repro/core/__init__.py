@@ -2,10 +2,14 @@
 
 Host plane (exact oracle): :mod:`repro.core.reference`, :mod:`repro.core.spade`.
 Device plane (JAX/TPU):    :mod:`repro.core.peel`, :mod:`repro.core.incremental`.
-Metrics API:               :mod:`repro.core.metrics` (DG / DW / FD, VSusp/ESusp).
+Semantics API:             :mod:`repro.core.semantics` (SuspSemantics — one
+                           VSusp/ESusp definition compiled into every engine;
+                           DG / DW / FD as registered instances) with the
+                           host projection in :mod:`repro.core.metrics`.
 """
 
 from .metrics import DG, DW, FD, DensityMetric, make_fd, make_metric
+from .semantics import SuspSemantics, available, register, resolve
 from .reference import (
     AdjGraph,
     PeelState,
@@ -26,6 +30,10 @@ __all__ = [
     "PeelState",
     "ReorderStats",
     "DensityMetric",
+    "SuspSemantics",
+    "register",
+    "resolve",
+    "available",
     "DG",
     "DW",
     "FD",

@@ -1,29 +1,37 @@
-"""Device-plane suspiciousness weighting (DG/DW/FD parity with
-:mod:`repro.core.metrics`, vectorized).
+"""DEPRECATED device-plane weighting helpers (legacy ``metric: str`` API).
 
-The host plane evaluates ``esusp`` per edge at arrival; the device plane
-weights whole batches at once.  FD's column weighting needs the live
-destination in-degree — maintained as an int32 vector updated with the
-same scatter that appends the edges.
-
-Quantization boundary: :func:`seed_base_weights` snaps the base graph to
-the host funnel's dyadic 2^-30 grid (float64 math on host), but the
-*streamed* tick weights below stay raw float32 — the exact float64 snap
-is not reproducible on device without x64, so host-vs-device weight
-parity on streamed edges holds to f32 ulps (and exactly on integer
-weights, which is what the differential harnesses pin).
+The hardcoded DG/DW/FD trio that used to live here is gone: every weight
+below now delegates to the registered :class:`repro.core.semantics.
+SuspSemantics` instances, whose ``seed_base``/``batch_weights`` are the
+one definition all four engines compile (see semantics.py for the
+quantization boundary).  These wrappers exist only so legacy callers and
+tests keep working; new code should use the semantics object directly
+(``semantics=DW`` on :class:`repro.serve.SpadeService`, or
+``sem.batch_weights(...)``).  Each call emits a
+:class:`~repro._warnings.SpadeDeprecationWarning`.
 """
 
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.metrics import _QUANTUM, quantize_susp_array
+from repro._warnings import SpadeDeprecationWarning
+from repro.core import semantics as _sem
 
 __all__ = ["dg_weights", "dw_weights", "fd_weights", "fd_batch_weights",
            "seed_base_weights"]
+
+
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} (repro.core.semantics)",
+        SpadeDeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def seed_base_weights(
@@ -34,68 +42,44 @@ def seed_base_weights(
     n: int,
     C: float = 5.0,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Base-graph edge suspiciousness for a device-plane service (host side).
-
-    One definition of the FD/DW/DG base-weight seeding shared by every
-    service plane (single-device and mesh-sharded alike), snapped to the
-    same dyadic 2^-30 grid as the host metric funnel
-    (:func:`repro.core.metrics.quantize_susp`) so the two planes' stored
-    weights cannot drift by an ulp and weight ties stay exact ties.
-
-    FD uses the *loaded-graph* destination in-degree (the device plane
-    seeds the whole base graph at once; per-arrival degrees start with the
-    incremental stream, via :func:`fd_batch_weights`).
-
-    Returns ``(base_w float32 [m], in_deg int64 [n])`` — the in-degree
-    vector doubles as the FD degree state the streaming ticks continue
-    from.
-    """
-    src = np.asarray(src)
-    dst = np.asarray(dst)
-    in_deg = np.zeros(n, np.int64)
-    np.add.at(in_deg, dst, 1)
-    if metric == "DG":
-        w = np.ones(src.shape[0], np.float64)
-    elif metric == "DW":
-        w = np.maximum(np.asarray(amt, np.float64), 1e-12)
-    elif metric == "FD":
-        w = 1.0 / np.log(in_deg[dst] + C)
-    else:
-        raise KeyError(f"unknown metric {metric!r}; choose from DG/DW/FD")
-    w = np.maximum(quantize_susp_array(w), _QUANTUM)  # positive through the snap
-    return w.astype(np.float32), in_deg
+    """DEPRECATED: ``resolve(metric).seed_base(...)`` — the registry-backed
+    batch-seeding rule (identical output, including the dyadic snap)."""
+    _warn("seed_base_weights(metric=...)", "SuspSemantics.seed_base")
+    if C != 5.0:
+        raise ValueError("legacy shim supports only the paper's C = 5.0")
+    return _sem.resolve(metric).seed_base(src, dst, amt, n)
 
 
 def dg_weights(amounts: jax.Array) -> jax.Array:
-    """DG: unweighted — every transaction counts 1."""
-    return jnp.ones_like(amounts, dtype=jnp.float32)
+    """DEPRECATED: DG semantics — every transaction counts 1."""
+    _warn("dg_weights", "semantics.DG")
+    return _sem.DG.esusp(jnp, None, None, amounts.astype(jnp.float32), None,
+                         None)
 
 
 def dw_weights(amounts: jax.Array) -> jax.Array:
-    """DW: transaction amount (clamped positive)."""
-    return jnp.maximum(amounts.astype(jnp.float32), 1e-12)
+    """DEPRECATED: DW semantics — transaction amount (clamped positive)."""
+    _warn("dw_weights", "semantics.DW")
+    return _sem.DW.esusp(jnp, None, None, amounts.astype(jnp.float32), None,
+                         None)
 
 
 def fd_weights(in_deg_dst: jax.Array, C: float = 5.0) -> jax.Array:
-    """FD column weighting 1/log(x + C) given destination in-degrees."""
-    return 1.0 / jnp.log(in_deg_dst.astype(jnp.float32) + C)
+    """DEPRECATED: FD column weighting given destination in-degrees."""
+    _warn("fd_weights", "semantics.FD")
+    if C != 5.0:
+        raise ValueError("legacy shim supports only the paper's C = 5.0")
+    return _sem.FD.esusp(jnp, None, None, None, in_deg_dst, None)
 
 
 def fd_batch_weights(
     in_deg: jax.Array, dst: jax.Array, valid: jax.Array, C: float = 5.0
 ) -> tuple[jax.Array, jax.Array]:
-    """Weight a batch FD-style with *arrival-time* degrees (host parity:
-    each edge sees the degree including earlier edges of the same batch).
-
-    Returns (edge weights, updated in_deg vector).
-    """
-    ones = valid.astype(jnp.int32)
-    # degree of dst at each edge's arrival = stored degree + # earlier batch
-    # edges with the same dst (exclusive running count via segment trick)
-    B = dst.shape[0]
-    same = (dst[:, None] == dst[None, :]) & valid[None, :] & valid[:, None]
-    earlier = jnp.tril(same, k=-1).sum(axis=1)
-    deg_at_arrival = in_deg[dst] + earlier
-    w = jnp.where(valid, 1.0 / jnp.log(deg_at_arrival.astype(jnp.float32) + C), 0.0)
-    new_deg = in_deg.at[dst].add(ones, mode="drop")
+    """DEPRECATED: ``FD.batch_weights`` — arrival-time degree weighting of
+    one batch (identical output)."""
+    _warn("fd_batch_weights", "SuspSemantics.batch_weights")
+    if C != 5.0:
+        raise ValueError("legacy shim supports only the paper's C = 5.0")
+    zeros = jnp.zeros(dst.shape[0], jnp.float32)
+    w, new_deg = _sem.FD.batch_weights(in_deg, dst, dst, zeros, valid)
     return w, new_deg

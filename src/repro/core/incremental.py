@@ -35,6 +35,7 @@ from repro.core.peel import (
     PeelResultDevice,
     bulk_peel,
     bulk_peel_warm,
+    bulk_peel_warm_checked,
     bulk_peel_warm_workset,
     select_bucket,
     workset_sizes,
@@ -44,12 +45,15 @@ from repro.graphstore.structs import DeviceGraph, append_edges, remove_edges
 __all__ = [
     "DeviceSpadeState",
     "WorksetTickInfo",
+    "BucketPredictor",
     "init_state",
     "insert_and_maintain",
     "insert_and_maintain_auto",
+    "insert_and_maintain_predictive",
     "delete_and_maintain",
     "slide_and_maintain",
     "slide_and_maintain_auto",
+    "slide_and_maintain_predictive",
     "full_refresh",
     "benign_mask",
 ]
@@ -347,6 +351,12 @@ class WorksetTickInfo(NamedTuple):
     v_bucket: int  # 0 on fallback
     e_bucket: int  # 0 on fallback
     fallback: bool
+    # predictive dispatch (BucketPredictor): buckets were chosen from the
+    # previous tick's counts without waiting for this tick's sync; a miss
+    # (counts outgrew the prediction) rode the in-program full-buffer
+    # fallback — correct, just slower — and re-anchored the predictor
+    predicted: bool = False
+    miss: bool = False
 
 
 @jax.jit
@@ -464,6 +474,208 @@ def slide_and_maintain_auto(
     g, bk, n_removed, nv, ne = _slide_phase_a(state, drop, src, dst, c, valid)
     return _dispatch_phase_b(state, g, bk, n_removed, src, dst, c, valid,
                              nv, ne, eps, max_rounds, use_kernel, min_bucket)
+
+
+# ---------------------------------------------------------------------------
+# predictive dispatch: pick buckets from the PREVIOUS tick's counts, check
+# the fit on device, and fetch this tick's counts only after phase B is
+# already in flight — no blocking device->host sync in the serving loop
+# ---------------------------------------------------------------------------
+
+
+class BucketPredictor:
+    """Host-side predictive workset-bucket selector.
+
+    The synced dispatcher (:func:`insert/slide_and_maintain_auto`) blocks
+    on this tick's suffix counts before it can pick buckets and dispatch
+    phase B — the serving loop's only blocking device->host transfer.
+    The predictor removes it: buckets come from the running max of the
+    last ``history`` ticks' counts, phase B dispatches immediately with a
+    device-side fit check (:func:`repro.core.peel.bulk_peel_warm_checked`),
+    and the actual counts are drained *after* dispatch, off the critical
+    path, to feed the next prediction.  A bucket miss rides the in-program
+    full-buffer fallback — the synced-scalar semantics, selected on device
+    instead of on host — so prediction can cost a slow tick but never a
+    wrong one.
+
+    One predictor per served stream; ``e_capacity`` is the *per-shard*
+    local capacity under a mesh (the sharded engine buckets per-shard
+    counts; see ``sharded_workset_sizes``).
+    """
+
+    def __init__(
+        self,
+        n_capacity: int,
+        e_capacity: int,
+        min_bucket: int = 64,
+        history: int = 4,
+    ):
+        self.n_capacity = int(n_capacity)
+        self.e_capacity = int(e_capacity)
+        self.min_bucket = int(min_bucket)
+        self.history = max(int(history), 1)
+        self._nv: list[int] = []
+        self._ne: list[int] = []
+
+    def predict(self) -> tuple[int, int] | None:
+        """``None`` before any observation (callers take the synced path);
+        ``(0, 0)`` when the recent suffix outgrew the bucket ladder (direct
+        full-buffer dispatch, no check needed); else ``(v_bucket,
+        e_bucket)`` for the checked dispatch."""
+        if not self._nv:
+            return None
+        bv = select_bucket(max(self._nv), self.n_capacity, floor=self.min_bucket)
+        be = select_bucket(max(self._ne), self.e_capacity, floor=self.min_bucket)
+        if bv is None or be is None:
+            return (0, 0)
+        return (bv, be)
+
+    def observe(self, nv: int, ne: int) -> None:
+        self._nv = (self._nv + [int(nv)])[-self.history:]
+        self._ne = (self._ne + [int(ne)])[-self.history:]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("eps", "max_rounds", "v_bucket", "e_bucket", "use_kernel",
+                     "with_drops", "d_bucket"),
+    donate_argnames=("state", "g"),
+)
+def _phase_b_checked(
+    state, g, bk, n_removed, nv, ne, src, dst, c, valid,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    v_bucket: int = 0,
+    e_bucket: int = 0,
+    use_kernel: bool = False,
+    with_drops: bool = True,
+    d_bucket: int = 0,
+):
+    """Phase B with predicted buckets: the workset/full-buffer choice moves
+    onto the device (``lax.cond`` on the actual counts), so dispatch needs
+    no host-resident count."""
+    res, fits = bulk_peel_warm_checked(
+        g, bk.keep, bk.prior_g, nv, ne, eps=eps, max_rounds=max_rounds,
+        v_bucket=v_bucket, e_bucket=e_bucket, use_kernel=use_kernel,
+    )
+    return _slide_epilogue(state, g, res, bk, n_removed, src, dst, c, valid,
+                           with_drops=with_drops, d_bucket=d_bucket), fits
+
+
+def _predictive_dispatch_core(
+    state, nv, ne, predictor: BucketPredictor, with_drops, n_dropped,
+    *, synced, checked, full,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """Predictor-driven phase-B dispatch, shared by the single-device and
+    mesh-sharded engines (they differ only in the three phase-B callables:
+    ``synced(with_drops)``, ``checked(bv, be, wd, bd)``,
+    ``full(wd, bd)``).
+
+    Counts are fetched only *after* dispatch.  ``n_dropped`` is the host's
+    (upper bound on the) number of live edges in the drop mask — the
+    windowed service knows it exactly from its ring bookkeeping, which
+    keeps the ``d_bucket`` compaction static without a sync; ``None``
+    falls back to the full-width w0 decrement scatter."""
+    pred = predictor.predict()
+    if pred is None:
+        # no history yet: classic synced-scalar dispatch seeds the predictor
+        new_state, info = synced(with_drops)
+        predictor.observe(info.n_suffix_vertices, info.n_suffix_edges)
+        return new_state, info
+
+    wd = with_drops and n_dropped != 0
+    bd = 0
+    if wd and n_dropped is not None:
+        bd = select_bucket(n_dropped, state.graph.e_capacity,
+                           floor=predictor.min_bucket) or 0
+    bv, be = pred
+    if bv and be:
+        new_state, _fits = checked(bv, be, wd, bd)
+    else:  # recent suffixes outgrew the ladder: full-buffer, no check
+        new_state = full(wd, bd)
+    # drained AFTER dispatch: the transfer overlaps phase B instead of
+    # gating it — feeds the next prediction and the telemetry only
+    nv_i, ne_i = (int(x) for x in np.asarray(jnp.stack([nv, ne])))
+    predictor.observe(nv_i, ne_i)
+    hit = bool(bv and be) and nv_i <= bv and ne_i <= be
+    return new_state, WorksetTickInfo(
+        nv_i, ne_i,
+        v_bucket=bv if hit else 0,
+        e_bucket=be if hit else 0,
+        fallback=not hit,
+        predicted=True,
+        miss=bool(bv and be) and not hit,
+    )
+
+
+def _predictive_dispatch(
+    state, g, bk, n_removed, src, dst, c, valid, nv, ne,
+    predictor: BucketPredictor, eps, max_rounds, use_kernel,
+    with_drops=True, n_dropped=None,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """Single-device binding of :func:`_predictive_dispatch_core`."""
+    return _predictive_dispatch_core(
+        state, nv, ne, predictor, with_drops, n_dropped,
+        synced=lambda wd: _dispatch_phase_b(
+            state, g, bk, n_removed, src, dst, c, valid, nv, ne,
+            eps, max_rounds, use_kernel, predictor.min_bucket, with_drops=wd,
+        ),
+        checked=lambda bv, be, wd, bd: _phase_b_checked(
+            state, g, bk, n_removed, nv, ne, src, dst, c, valid,
+            eps=eps, max_rounds=max_rounds, v_bucket=bv, e_bucket=be,
+            use_kernel=use_kernel, with_drops=wd, d_bucket=bd,
+        ),
+        full=lambda wd, bd: _phase_b(
+            state, g, bk, n_removed, src, dst, c, valid,
+            eps=eps, max_rounds=max_rounds, v_bucket=0, e_bucket=0,
+            use_kernel=use_kernel, with_drops=wd, d_bucket=bd,
+        ),
+    )
+
+
+def insert_and_maintain_predictive(
+    state: DeviceSpadeState,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    predictor: BucketPredictor,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    use_kernel: bool = False,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """:func:`insert_and_maintain_auto` without the blocking count sync:
+    buckets are predicted from ``predictor``'s history and checked on
+    device.  Bit-identical results to the synced/fused paths on integer
+    weights (bucket choice never changes the math, only the cost)."""
+    g, bk, n_removed, nv, ne = _insert_phase_a(state, src, dst, c, valid)
+    return _predictive_dispatch(state, g, bk, n_removed, src, dst, c, valid,
+                                nv, ne, predictor, eps, max_rounds, use_kernel,
+                                with_drops=False, n_dropped=0)
+
+
+def slide_and_maintain_predictive(
+    state: DeviceSpadeState,
+    drop: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    predictor: BucketPredictor,
+    n_dropped: int | None = None,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    use_kernel: bool = False,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """:func:`slide_and_maintain_auto` without the blocking count sync.
+
+    ``n_dropped``: host-known upper bound on the live edges in ``drop``
+    (the windowed service's ring count is exact); ``None`` keeps the
+    full-width w0 decrement."""
+    g, bk, n_removed, nv, ne = _slide_phase_a(state, drop, src, dst, c, valid)
+    return _predictive_dispatch(state, g, bk, n_removed, src, dst, c, valid,
+                                nv, ne, predictor, eps, max_rounds, use_kernel,
+                                n_dropped=n_dropped)
 
 
 @partial(jax.jit, static_argnames=("eps",))

@@ -1,4 +1,4 @@
-"""Density metrics and the VSusp/ESusp programmability API (paper §3).
+"""Host-plane density metrics: the per-edge compiled form of a semantics.
 
 A *density metric* is ``g(S) = f(S)/|S|`` with
 ``f(S) = Σ a_i + Σ c_ij`` (Eq. 1).  Spade supports any metric expressible
@@ -10,64 +10,47 @@ through two user hooks (Property 3.1: arithmetic density, ``a_i ≥ 0``,
   arrival time (the paper's C++ snippet reads the live degree, so e.g.
   Fraudar's column weighting uses the destination degree *at insertion*).
 
-Instances (paper Appendix F):
+This module is now a **thin adapter** over the pluggable semantics plane
+(:mod:`repro.core.semantics`): the canonical DG/DW/FD definitions live
+there as :class:`~repro.core.semantics.SuspSemantics` instances (one
+definition compiled into every engine), and the host-plane objects below
+are their :meth:`~repro.core.semantics.SuspSemantics.host_metric`
+projections.  ``DensityMetric`` remains the host oracle's per-edge funnel:
+scalar evaluation plus the dyadic-grid snap (the quantization boundary —
+see semantics.py for the determinism rationale).
 
-* **DG**  (Charikar [6])        — ``esusp = 1``,   ``vsusp = 0``
-* **DW**  (Gudapati et al. [18])— ``esusp = c_ij`` (transaction amount)
-* **FD**  (Fraudar, Hooi [19])  — ``vsusp = a_u`` side info,
-  ``esusp = 1/log(deg(dst) + C)`` with ``C = 5``
+One registry backs everything: :func:`make_metric` resolves through
+``semantics.resolve``, so its error message can never drift from the set
+of semantics the device planes accept.
 """
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
 from .reference import AdjGraph
+from .semantics import (
+    _QUANTUM,
+    SuspSemantics,
+    quantize_susp,
+    quantize_susp_array,
+    resolve,
+)
+from .semantics import DG as DG_SEMANTICS
+from .semantics import DW as DW_SEMANTICS
+from .semantics import FD as FD_SEMANTICS
 
-__all__ = ["DensityMetric", "DG", "DW", "FD", "make_metric", "quantize_susp",
-           "quantize_susp_array"]
+__all__ = ["DensityMetric", "DG", "DW", "FD", "make_fd", "make_metric",
+           "quantize_susp", "quantize_susp_array"]
 
 VSuspFn = Callable[[int, AdjGraph], float]
 ESuspFn = Callable[[int, int, float, AdjGraph], float]
 
-# Suspiciousness values are snapped to a dyadic grid (multiples of 2^-30)
-# at the metric funnel.  Rationale (determinism contract, reference.py):
-# the incremental reorder recovers peeling weights as Delta_old + edge
-# terms while the from-scratch peel runs a running subtraction — different
-# float64 summation orders.  Irrational metric values (FD's 1/log) then
-# drift by an ulp between the two runs and the (weight, id) tie-break
-# resolves "equal" weights differently.  Grid values with magnitude below
-# 2^23 sum *exactly* in float64 in any order, so ties are exact ties and
-# the vertex-id tie-break is stable across incremental and scratch runs.
-# The 2^-30 (~1e-9 relative) snap is far below any fraud-semantics signal.
-_QUANT_BITS = 30
-_QUANTUM = math.ldexp(1.0, -_QUANT_BITS)
-
-
-def quantize_susp(x: float) -> float:
-    """Round a suspiciousness value to the shared dyadic grid."""
-    return math.ldexp(round(math.ldexp(x, _QUANT_BITS)), -_QUANT_BITS)
-
-
-def quantize_susp_array(x):
-    """Vectorized :func:`quantize_susp` (numpy, float64 intermediate).
-
-    ``np.rint`` rounds half-to-even exactly like the scalar ``round``, so
-    host-plane per-edge quantization and device-plane batch seeding land
-    on identical grid points — the single definition both planes share.
-    """
-    import numpy as np
-
-    return np.ldexp(
-        np.rint(np.ldexp(np.asarray(x, np.float64), _QUANT_BITS)), -_QUANT_BITS
-    )
-
 
 @dataclass(frozen=True)
 class DensityMetric:
-    """A pluggable fraud-semantics definition (the paper's VSusp/ESusp pair).
+    """A host-plane fraud-semantics definition (the paper's VSusp/ESusp pair).
 
     ``esusp`` receives ``(src, dst, raw_weight, graph)`` where ``raw_weight``
     is the application payload on the transaction (e.g. amount); it must
@@ -94,46 +77,39 @@ class DensityMetric:
 
 
 # ---------------------------------------------------------------------------
-# Paper instances
+# Paper instances (host projections of the registered semantics)
 # ---------------------------------------------------------------------------
 
-DG = DensityMetric(
-    name="DG",
-    vsusp=lambda u, g: 0.0,
-    esusp=lambda u, v, raw, g: 1.0,
-)
-
-DW = DensityMetric(
-    name="DW",
-    vsusp=lambda u, g: 0.0,
-    esusp=lambda u, v, raw, g: max(float(raw), 1e-12),
-)
-
-
-def _fd_esusp(u: int, v: int, raw: float, g: AdjGraph, C: float = 5.0) -> float:
-    # Fraudar column weighting: 1/log(x + C) with x the degree of the object
-    # (destination) vertex at arrival time.
-    x = float(g.in_deg[v]) if v < g.n else 0.0
-    return 1.0 / math.log(x + C)
+DG = DG_SEMANTICS.host_metric()
+DW = DW_SEMANTICS.host_metric()
 
 
 def make_fd(vertex_prior: Callable[[int], float] | None = None) -> DensityMetric:
     """Fraudar with an optional per-vertex side-information prior."""
-    prior = vertex_prior or (lambda u: 0.0)
+    base = FD_SEMANTICS.host_metric()
+    if vertex_prior is None:
+        return base
     return DensityMetric(
         name="FD",
-        vsusp=lambda u, g: float(prior(u)),
-        esusp=_fd_esusp,
+        vsusp=lambda u, g: float(vertex_prior(u)),
+        esusp=base.esusp,
     )
 
 
 FD = make_fd()
 
-_REGISTRY = {"DG": DG, "DW": DW, "FD": FD, "dg": DG, "dw": DW, "fd": FD}
 
+def make_metric(
+    metric: DensityMetric | SuspSemantics | str,
+) -> DensityMetric:
+    """Resolve a metric/semantics spec to the host-plane compiled form.
 
-def make_metric(name: str) -> DensityMetric:
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown metric {name!r}; choose from DG/DW/FD") from None
+    Accepts a registered semantics name (``"DG"``/``"DW"``/``"FD"``/any
+    user-registered name, case-insensitive), a :class:`SuspSemantics`
+    (compiled via its host adapter), or a ready ``DensityMetric`` (passed
+    through).  The name lookup and the error message both come from the
+    single semantics registry, shared with the device-plane seeding.
+    """
+    if isinstance(metric, DensityMetric):
+        return metric
+    return resolve(metric).host_metric()

@@ -41,6 +41,7 @@ __all__ = [
     "bulk_peel",
     "bulk_peel_warm",
     "bulk_peel_warm_workset",
+    "bulk_peel_warm_checked",
     "select_bucket",
     "workset_sizes",
 ]
@@ -531,3 +532,52 @@ def bulk_peel_warm_workset(
         order=jnp.zeros(V, jnp.int32),
         delta=delta,
     )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("eps", "max_rounds", "v_bucket", "e_bucket", "use_kernel"),
+)
+def bulk_peel_warm_checked(
+    g: DeviceGraph,
+    keep: jax.Array,
+    prior_best_g: jax.Array,
+    nv: jax.Array,
+    ne: jax.Array,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    *,
+    v_bucket: int,
+    e_bucket: int,
+    use_kernel: bool = False,
+) -> tuple[PeelResultDevice, jax.Array]:
+    """Warm peel with a *device-side* bucket-fit check — the primitive the
+    predictive workset dispatcher builds on.
+
+    ``v_bucket/e_bucket`` come from the host's *prediction* (previous-tick
+    suffix counts), not from this tick's synced counts; ``nv/ne`` are this
+    tick's actual counts, still resident on device.  ``lax.cond`` selects
+    between the workset path (counts fit the predicted buckets — the
+    gather is lossless) and the full-buffer warm peel (bucket miss — the
+    always-correct fallback), so the host never has to block on the count
+    transfer before dispatching the re-peel.  Both branches return the
+    full-width ``PeelResultDevice``; on integer weights they are
+    bit-identical whenever both are applicable, so a miss costs time,
+    never correctness.
+
+    Returns ``(result, fits)`` with ``fits`` the device bool the caller
+    can drain lazily for telemetry.
+    """
+    fits = (nv <= jnp.int32(v_bucket)) & (ne <= jnp.int32(e_bucket))
+    res = jax.lax.cond(
+        fits,
+        lambda: bulk_peel_warm_workset(
+            g, keep, prior_best_g, eps=eps, max_rounds=max_rounds,
+            v_bucket=v_bucket, e_bucket=e_bucket, use_kernel=use_kernel,
+        ),
+        lambda: bulk_peel_warm(
+            g, keep, prior_best_g, eps=eps, max_rounds=max_rounds,
+            use_kernel=use_kernel,
+        ),
+    )
+    return res, fits

@@ -4,7 +4,12 @@
 with the developer-facing surface from the paper:
 
 * ``VSusp`` / ``ESusp``      — plug in fraud semantics (or pass a
-  :class:`~repro.core.metrics.DensityMetric`).
+  :class:`~repro.core.semantics.SuspSemantics` / a registered name / a
+  host-only :class:`~repro.core.metrics.DensityMetric`).  A
+  ``SuspSemantics`` is compiled into the host funnel through its
+  :meth:`~repro.core.semantics.SuspSemantics.host_metric` adapter — the
+  same definition the device/sharded/workset engines compile, so this
+  class is a thin adapter over the semantics plane.
 * ``Detect``                 — current fraudulent community S^P.
 * ``InsertEdge`` / ``InsertBatchEdges`` — incremental maintenance.
 * ``DeleteEdge``             — incremental deletion (Appendix C.1); with
@@ -58,8 +63,10 @@ class InsertResult:
 class Spade:
     """Real-time fraud detection on an evolving transaction graph."""
 
-    def __init__(self, metric: DensityMetric | str = "FD", edge_grouping: bool = False):
-        self._metric = make_metric(metric) if isinstance(metric, str) else metric
+    def __init__(self, metric="FD", edge_grouping: bool = False):
+        # accepts a registered name, a SuspSemantics, or a DensityMetric —
+        # make_metric funnels all three through the one semantics registry
+        self._metric = make_metric(metric)
         self._g = AdjGraph(0)
         self._state: PeelState | None = None
         self._edge_grouping = bool(edge_grouping)

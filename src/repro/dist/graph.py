@@ -32,11 +32,19 @@ single device                  sharded (``mesh=``, ``axis=``)
 ``init_state``                 ``init_sharded_state``
 ``insert_and_maintain``        ``sharded_insert_and_maintain``
 ``insert_and_maintain_auto``   ``sharded_insert_and_maintain_auto``
+``insert_..._predictive``      ``sharded_insert_and_maintain_predictive``
 ``delete_and_maintain``        ``sharded_delete_and_maintain``
 ``slide_and_maintain``         ``sharded_slide_and_maintain``
 ``slide_and_maintain_auto``    ``sharded_slide_and_maintain_auto``
+``slide_..._predictive``       ``sharded_slide_and_maintain_predictive``
 ``full_refresh``               ``sharded_full_refresh``
 =============================  ========================================
+
+The engines are semantics-agnostic by design: edge suspiciousness arrives
+pre-weighted through one compiled :class:`repro.core.semantics.
+SuspSemantics` (the service plane jits ``batch_weights`` once per
+semantics), so a user-defined semantics reaches the sharded fast path
+without touching this file.
 """
 
 from __future__ import annotations
@@ -52,8 +60,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.incremental import (
+    BucketPredictor,
     DeviceSpadeState,
     WorksetTickInfo,
+    _predictive_dispatch_core,
     _slide_epilogue,
     _slide_prologue,
 )
@@ -74,9 +84,11 @@ __all__ = [
     "init_sharded_state",
     "sharded_insert_and_maintain",
     "sharded_insert_and_maintain_auto",
+    "sharded_insert_and_maintain_predictive",
     "sharded_delete_and_maintain",
     "sharded_slide_and_maintain",
     "sharded_slide_and_maintain_auto",
+    "sharded_slide_and_maintain_predictive",
     "sharded_full_refresh",
 ]
 
@@ -712,6 +724,123 @@ def sharded_slide_and_maintain_auto(
     return _sharded_dispatch_phase_b(
         state, g, bk, n_removed, src, dst, c, valid, nv, ne, mesh, axis,
         eps, max_rounds, min_bucket,
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharded predictive dispatch: the core engine's BucketPredictor drives the
+# mesh path too — buckets from the previous tick's (pmax'd per-shard)
+# counts, fit-checked on device, counts drained after dispatch
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "eps", "max_rounds", "v_bucket",
+                     "e_bucket", "with_drops", "d_bucket"),
+    donate_argnames=("state", "g"),
+)
+def _sharded_phase_b_checked(
+    state, g, bk, n_removed, nv, ne, src, dst, c, valid,
+    mesh, axis,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+    v_bucket: int = 0,
+    e_bucket: int = 0,
+    with_drops: bool = True,
+    d_bucket: int = 0,
+):
+    """Sharded twin of :func:`repro.core.incremental._phase_b_checked`:
+    ``lax.cond`` between the per-shard workset peel and the full-buffer
+    sharded warm peel, driven by the replicated count scalars."""
+    fits = (nv <= jnp.int32(v_bucket)) & (ne <= jnp.int32(e_bucket))
+    res = jax.lax.cond(
+        fits,
+        lambda: sharded_bulk_peel_warm_workset(
+            g, bk.keep, bk.prior_g, mesh, axis=axis, eps=eps,
+            max_rounds=max_rounds, v_bucket=v_bucket, e_bucket=e_bucket,
+        ),
+        lambda: _sharded_peel(
+            g, bk.keep, bk.prior_g, mesh, axis, eps, max_rounds, warm=True
+        ),
+    )
+    return _slide_epilogue(state, g, res, bk, n_removed, src, dst, c, valid,
+                           with_drops=with_drops, d_bucket=d_bucket), fits
+
+
+def _sharded_predictive_dispatch(
+    state, g, bk, n_removed, src, dst, c, valid, nv, ne,
+    predictor: BucketPredictor, mesh, axis, eps, max_rounds,
+    with_drops=True, n_dropped=None,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """Sharded binding of the shared predictor-driven dispatcher
+    (:func:`repro.core.incremental._predictive_dispatch_core`): only the
+    three phase-B callables differ from the single-device engine."""
+    return _predictive_dispatch_core(
+        state, nv, ne, predictor, with_drops, n_dropped,
+        synced=lambda wd: _sharded_dispatch_phase_b(
+            state, g, bk, n_removed, src, dst, c, valid, nv, ne, mesh, axis,
+            eps, max_rounds, predictor.min_bucket, with_drops=wd,
+        ),
+        checked=lambda bv, be, wd, bd: _sharded_phase_b_checked(
+            state, g, bk, n_removed, nv, ne, src, dst, c, valid, mesh, axis,
+            eps=eps, max_rounds=max_rounds, v_bucket=bv, e_bucket=be,
+            with_drops=wd, d_bucket=bd,
+        ),
+        full=lambda wd, bd: _sharded_phase_b(
+            state, g, bk, n_removed, src, dst, c, valid, mesh, axis,
+            eps=eps, max_rounds=max_rounds, v_bucket=0, e_bucket=0,
+            with_drops=wd, d_bucket=bd,
+        ),
+    )
+
+
+def sharded_insert_and_maintain_predictive(
+    state: DeviceSpadeState,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    predictor: BucketPredictor,
+    mesh: Mesh,
+    axis: str = "data",
+    eps: float = 0.1,
+    max_rounds: int = 0,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """Edge-sharded twin of
+    :func:`repro.core.incremental.insert_and_maintain_predictive`.
+    ``predictor.e_capacity`` must be the per-shard local capacity."""
+    g, bk, n_removed, nv, ne = _sharded_insert_phase_a(
+        state, src, dst, c, valid, mesh, axis
+    )
+    return _sharded_predictive_dispatch(
+        state, g, bk, n_removed, src, dst, c, valid, nv, ne, predictor,
+        mesh, axis, eps, max_rounds, with_drops=False, n_dropped=0,
+    )
+
+
+def sharded_slide_and_maintain_predictive(
+    state: DeviceSpadeState,
+    drop: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    c: jax.Array,
+    valid: jax.Array,
+    predictor: BucketPredictor,
+    mesh: Mesh,
+    axis: str = "data",
+    n_dropped: int | None = None,
+    eps: float = 0.1,
+    max_rounds: int = 0,
+) -> tuple[DeviceSpadeState, WorksetTickInfo]:
+    """Edge-sharded twin of
+    :func:`repro.core.incremental.slide_and_maintain_predictive`."""
+    g, bk, n_removed, nv, ne = _sharded_slide_phase_a(
+        state, drop, src, dst, c, valid, mesh, axis
+    )
+    return _sharded_predictive_dispatch(
+        state, g, bk, n_removed, src, dst, c, valid, nv, ne, predictor,
+        mesh, axis, eps, max_rounds, n_dropped=n_dropped,
     )
 
 

@@ -1,99 +1,25 @@
-"""Device-plane streaming fraud service: the multi-pod serving loop.
+"""DEPRECATED device-plane entrypoint (legacy ``metric: str`` flag soup).
 
-The host service (:mod:`repro.serve.service`) is the paper's single-box
-deployment; this loop is the pod-scale twin: fixed-size batched ticks
-through the TPU-native engine (``insert_and_maintain``), FD/DW/DG
-weighting on device, benign/urgent statistics, periodic exact refresh, and
-capacity management.  On a real cluster each tick is one device program
-under the production mesh; here it runs on the CPU backend.
-
-With ``workset=True`` every tick runs through the affected-area workset
-engine (DESIGN.md §8): phase A applies the structural update and counts
-the affected suffix, the host picks power-of-two buckets from those two
-scalars, and phase B re-peels only the gathered workset — falling back to
-the full-buffer warm peel when the suffix exceeds the largest bucket.
-Per-tick telemetry (workset vs fallback, bucket high-water marks) lands in
-the report.
-
-Per-tick statistics stay on device: benign counts accumulate in a device
-scalar and the ever-detected vertex set in a device bool vector, drained
-once at shutdown — no device->host round-trip inside the serving loop
-beyond the workset engine's two count scalars.
+The serving loop now lives in :mod:`repro.serve.spade_service` behind the
+:class:`~repro.serve.spade_service.SpadeService` facade; this module keeps
+the old 12-keyword ``run_device_service`` signature working as a shim that
+translates its flags into an :class:`~repro.serve.spade_service.EngineSpec`
+(``predictive=False``: the legacy workset mode is the synced-scalar
+dispatcher, exactly as before).  Each call emits a
+:class:`~repro._warnings.SpadeDeprecationWarning`.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from functools import partial
+import warnings
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.device_metrics import (
-    dg_weights,
-    dw_weights,
-    fd_batch_weights,
-    seed_base_weights,
-)
-from repro.core.incremental import (
-    DeviceSpadeState,
-    benign_mask,
-    full_refresh,
-    init_state,
-    insert_and_maintain,
-    insert_and_maintain_auto,
-    slide_and_maintain,
-    slide_and_maintain_auto,
-)
-from repro.dist.graph import (
-    init_sharded_state,
-    shard_graph,
-    sharded_full_refresh,
-    sharded_insert_and_maintain,
-    sharded_insert_and_maintain_auto,
-    sharded_slide_and_maintain,
-    sharded_slide_and_maintain_auto,
-)
+from repro._warnings import SpadeDeprecationWarning
 from repro.graphstore.generators import TxStream
-from repro.graphstore.structs import device_graph_from_coo
+from repro.serve.spade_service import DeviceServiceReport, EngineSpec, SpadeService
 
 __all__ = ["DeviceServiceReport", "run_device_service"]
-
-
-@dataclass
-class DeviceServiceReport:
-    n_edges: int
-    n_ticks: int
-    mean_tick_seconds: float
-    mean_us_per_edge: float
-    benign_fraction: float
-    fraud_recall: float
-    final_g: float
-    n_refreshes: int
-    window_ticks: int = 0  # 0 = unbounded (insert-only) service
-    n_expired_edges: int = 0  # edges that slid out of the window
-    live_edges: int = 0  # edges resident at shutdown
-    # workset-engine telemetry (zeros when workset=False).  Edge counts
-    # follow WorksetTickInfo semantics: global on a single device, max
-    # PER-SHARD under a mesh — not comparable across the two modes.
-    n_workset_ticks: int = 0
-    n_fallback_ticks: int = 0
-    max_suffix_edges: int = 0  # high-water mark of the affected suffix
-    max_e_bucket: int = 0  # largest edge bucket dispatched
-
-
-@jax.jit
-def _accum_benign(acc, state: DeviceSpadeState, src, dst, c, valid):
-    """Device-side benign counter (Def 4.1 against the PRE-tick state);
-    padded tail lanes of a partial tick must not count toward stats."""
-    return acc + jnp.sum(benign_mask(state, src, dst, c) & valid)
-
-
-@jax.jit
-def _accum_detected(ever, community):
-    return ever | community
 
 
 def run_device_service(
@@ -110,161 +36,30 @@ def run_device_service(
     workset: bool = False,
     min_bucket: int = 64,
 ) -> DeviceServiceReport:
-    """Replay ``stream`` through the device engine in fixed-size ticks.
+    """DEPRECATED shim: use ``SpadeService(semantics, EngineSpec(...))``.
 
-    With ``mesh=`` the edge buffers are block-sharded along ``shard_axis``
-    (vertex state replicated) and every tick runs the dist plane's
-    psum-reduced engine (:mod:`repro.dist.graph`); without it, the
-    single-device engine.  Results are identical up to reduction-order
-    rounding.
-
-    With ``window_ticks=N > 0`` the service runs in **sliding-window mode**
-    (paper Appendix C.3): each tick expires the stream batch falling out
-    of an N-tick ring *and* inserts the new batch in one fused
-    ``slide_and_maintain`` device program (a single warm re-peel covers
-    both updates), so only the base graph plus the last N ticks of
-    transactions are resident.  Because ``remove_edges`` compacts
-    survivors to the buffer prefix, the oldest resident batch always
-    occupies the slots right after the base graph and the edge capacity
-    is bounded by ``m_base + (N+1) * batch_edges`` regardless of stream
-    length.
-
-    With ``workset=True`` ticks dispatch through the workset engine
-    (bit-identical on integer weights; automatic full-buffer fallback),
-    turning steady-state per-round work from O(E_capacity) into
-    O(|affected suffix|)."""
-    n = stream.n_vertices
-    m_base = stream.base_src.shape[0]
-    m_total = m_base + stream.inc_src.shape[0]
-    if window_ticks:
-        e_cap = m_base + (window_ticks + 1) * batch_edges
-    else:
-        e_cap = int(m_total * capacity_slack) + batch_edges
-
-    # one shared definition of the FD/DW/DG base seeding (dyadic-snapped)
-    base_w, in_deg = seed_base_weights(
-        metric, stream.base_src, stream.base_dst, stream.base_amt, n
+    Flag-for-flag equivalent to the old loop (same seeding, same engines,
+    synced-scalar workset dispatch); ``metric`` resolves through the one
+    semantics registry, so registered custom semantics work here too.
+    """
+    warnings.warn(
+        "run_device_service is deprecated; use repro.serve.SpadeService "
+        "with an EngineSpec (semantics=... replaces metric=...)",
+        SpadeDeprecationWarning,
+        stacklevel=2,
     )
-
-    g = device_graph_from_coo(
-        n, stream.base_src, stream.base_dst, base_w,
-        n_capacity=-(-n // 512) * 512, e_capacity=-(-e_cap // 512) * 512,
-    )
-    if mesh is not None:
-        g = shard_graph(g, mesh, axis=shard_axis)
-        state = init_sharded_state(g, mesh, axis=shard_axis, eps=eps)
-        refresh = partial(sharded_full_refresh, mesh=mesh, axis=shard_axis)
-        if workset:
-            maintain = partial(sharded_insert_and_maintain_auto, mesh=mesh,
-                               axis=shard_axis, min_bucket=min_bucket)
-            slide = partial(sharded_slide_and_maintain_auto, mesh=mesh,
-                            axis=shard_axis, min_bucket=min_bucket)
-        else:
-            maintain = partial(sharded_insert_and_maintain, mesh=mesh,
-                               axis=shard_axis)
-            slide = partial(sharded_slide_and_maintain, mesh=mesh,
-                            axis=shard_axis)
-    else:
-        state = init_state(g, eps=eps)
-        refresh = full_refresh
-        if workset:
-            maintain = partial(insert_and_maintain_auto, min_bucket=min_bucket)
-            slide = partial(slide_and_maintain_auto, min_bucket=min_bucket)
-        else:
-            maintain = insert_and_maintain
-            slide = slide_and_maintain
-    deg_dev = jnp.asarray(in_deg, jnp.int32)
-    if deg_dev.shape[0] < g.n_capacity:
-        deg_dev = jnp.pad(deg_dev, (0, g.n_capacity - deg_dev.shape[0]))
-
-    n_inc = stream.inc_src.shape[0]
-    n_ticks = 0
-    n_refresh = 0
-    n_expired = 0
-    t_total = 0.0
-    n_workset = 0
-    n_fallback = 0
-    max_suffix_edges = 0
-    max_e_bucket = 0
-    ring: list[int] = []  # per-tick resident edge counts, oldest first
-    benign_acc = jnp.int32(0)  # device accumulator, drained at shutdown
-    ever_detected = jnp.zeros(g.n_capacity, bool)  # vertices ever in S^P
-    slot_ids = jnp.arange(g.e_capacity, dtype=jnp.int32)
-    for i in range(0, n_inc, batch_edges):
-        j = min(i + batch_edges, n_inc)
-        pad = batch_edges - (j - i)
-        bs = np.concatenate([stream.inc_src[i:j], np.zeros(pad, np.int64)])
-        bd = np.concatenate([stream.inc_dst[i:j], np.zeros(pad, np.int64)])
-        amt = np.concatenate([stream.inc_amt[i:j], np.zeros(pad)])
-        valid = np.concatenate([np.ones(j - i, bool), np.zeros(pad, bool)])
-        bs_d = jnp.asarray(bs, jnp.int32)
-        bd_d = jnp.asarray(bd, jnp.int32)
-        valid_d = jnp.asarray(valid)
-        if metric == "FD":
-            w, deg_dev = fd_batch_weights(deg_dev, bd_d, valid_d)
-        elif metric == "DG":
-            w = dg_weights(jnp.asarray(amt, jnp.float32))
-        else:
-            w = dw_weights(jnp.asarray(amt, jnp.float32))
-        benign_acc = _accum_benign(benign_acc, state, bs_d, bd_d, w, valid_d)
-        t0 = time.perf_counter()
-        info = None
-        if window_ticks and len(ring) >= window_ticks:
-            # fused tick: expire the batch sliding out + insert the new one
-            # with a single warm re-peel.  After compaction the oldest
-            # resident batch always sits right after the base graph.
-            cnt0 = ring.pop(0)
-            drop = (slot_ids >= m_base) & (slot_ids < m_base + cnt0)
-            out = slide(
-                state, drop, bs_d, bd_d, w.astype(jnp.float32), valid_d,
-                eps=eps, max_rounds=max_rounds,
-            )
-            state, info = out if workset else (out, None)
-            n_expired += cnt0
-        else:
-            out = maintain(
-                state, bs_d, bd_d, w.astype(jnp.float32), valid_d,
-                eps=eps, max_rounds=max_rounds,
-            )
-            state, info = out if workset else (out, None)
-        jax.block_until_ready(state.best_g)
-        t_total += time.perf_counter() - t0
-        if info is not None:
-            n_fallback += info.fallback
-            n_workset += not info.fallback
-            max_suffix_edges = max(max_suffix_edges, info.n_suffix_edges)
-            max_e_bucket = max(max_e_bucket, info.e_bucket)
-        if window_ticks:
-            ring.append(int(valid.sum()))
-            # a windowed community is transient by design (the evidence
-            # expires); recall is therefore "ever detected while resident",
-            # tracked as a device bool vector and drained once at shutdown
-            ever_detected = _accum_detected(ever_detected, state.community)
-        n_ticks += 1
-        if refresh_every and n_ticks % refresh_every == 0:
-            state = refresh(state, eps=eps)
-            n_refresh += 1
-
-    # drain the device-resident stats once, after the loop
-    benign_total = int(benign_acc)
-    detected = np.where(np.asarray(ever_detected))[0].tolist()
-    comm = set(np.where(np.asarray(state.community))[0].tolist()) | set(detected)
-    fraud = set(stream.fraud_block.tolist())
-    recall = len(fraud & comm) / len(fraud) if fraud else 1.0
-    return DeviceServiceReport(
-        n_edges=n_inc,
-        n_ticks=n_ticks,
-        mean_tick_seconds=t_total / max(n_ticks, 1),
-        mean_us_per_edge=1e6 * t_total / max(n_inc, 1),
-        benign_fraction=benign_total / max(n_inc, 1),
-        fraud_recall=recall,
-        final_g=float(state.best_g),
-        n_refreshes=n_refresh,
+    spec = EngineSpec(
+        plane="device",
+        mesh=mesh,
+        shard_axis=shard_axis,
+        batch_edges=batch_edges,
+        eps=eps,
+        max_rounds=max_rounds,
+        refresh_every=refresh_every,
+        capacity_slack=capacity_slack,
         window_ticks=window_ticks,
-        n_expired_edges=n_expired,
-        live_edges=int(state.edge_count),
-        n_workset_ticks=n_workset,
-        n_fallback_ticks=n_fallback,
-        max_suffix_edges=max_suffix_edges,
-        max_e_bucket=max_e_bucket,
+        workset=workset,
+        predictive=False,
+        min_bucket=min_bucket,
     )
+    return SpadeService(semantics=metric, spec=spec).run(stream)

@@ -9,19 +9,22 @@ metrics:
 * **prevention ratio** R: fraction of a fraud burst's edges arriving
   *after* the fraudster was first detected (those are blockable).
 
-Two engines: the host oracle (exact, µs-level reorders — the paper's
-deployment) or the device plane (bulk batched maintenance).
+This module holds the host-plane serving loop; the public entrypoint of
+record is :class:`repro.serve.SpadeService` with ``EngineSpec(plane=
+"host")`` — :func:`run_service` remains as a deprecation shim.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.metrics import DensityMetric, make_metric
+from repro._warnings import SpadeDeprecationWarning
+from repro.core.metrics import DensityMetric
+from repro.core.semantics import SuspSemantics
 from repro.core.spade import Spade
 from repro.graphstore.generators import TxStream
 
@@ -44,11 +47,31 @@ class ServiceReport:
 
 def run_service(
     stream: TxStream,
-    metric: DensityMetric | str = "DW",
+    metric: DensityMetric | SuspSemantics | str = "DW",
     edge_grouping: bool = True,
     batch_size: int = 1,
     flush_every: float = 1.0,
     time_scale: float = 0.0,
+) -> ServiceReport:
+    """DEPRECATED shim: use ``SpadeService(semantics, EngineSpec(
+    plane="host", grouping=..., batch_edges=..., flush_every=...))``."""
+    warnings.warn(
+        "run_service is deprecated; use repro.serve.SpadeService with "
+        "EngineSpec(plane='host')",
+        SpadeDeprecationWarning,
+        stacklevel=2,
+    )
+    return _run_host_service(stream, metric=metric,
+                             edge_grouping=edge_grouping,
+                             batch_size=batch_size, flush_every=flush_every)
+
+
+def _run_host_service(
+    stream: TxStream,
+    metric: DensityMetric | SuspSemantics | str = "DW",
+    edge_grouping: bool = True,
+    batch_size: int = 1,
+    flush_every: float = 1.0,
 ) -> ServiceReport:
     """Replay ``stream`` and report latency/prevention metrics.
 

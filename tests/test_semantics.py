@@ -1,0 +1,278 @@
+"""Semantics plane + SpadeService facade tests.
+
+Covers: the single registry behind ``make_metric`` and the device seeding
+(error messages can't go stale), seed/batch-weight parity of the
+registered builtins with the legacy hardcoded formulas, the host adapter,
+the facade's engine dispatch (legacy shim equivalence, predictive-selector
+equivalence), and the deprecation shims.
+"""
+
+from __future__ import annotations
+
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro._warnings import SpadeDeprecationWarning
+from repro.core import Spade
+from repro.core.metrics import DensityMetric, make_metric
+from repro.core.semantics import (
+    DG,
+    DW,
+    FD,
+    SuspSemantics,
+    available,
+    quantize_susp_array,
+    register,
+    resolve,
+)
+from repro.graphstore.generators import make_transaction_stream
+from repro.serve import EngineSpec, SpadeService
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_one_registry_backs_make_metric_and_resolve():
+    assert resolve("dg") is DG and resolve("FD") is FD
+    assert resolve(DW) is DW
+    for name in ("DG", "DW", "FD"):
+        assert name in available()
+    with pytest.raises(KeyError) as ei:
+        make_metric("nope")
+    # the message is generated from the live registry, not a literal
+    for name in available():
+        assert name in str(ei.value)
+
+
+def test_registered_custom_semantics_reaches_name_lookups():
+    custom = SuspSemantics(
+        name="TESTREG",
+        esusp=lambda xp, s, d, raw, deg, aux: xp.maximum(raw, 1e-12) * 3.0,
+    )
+    register(custom)
+    assert "TESTREG" in available()
+    assert resolve("testreg") is custom
+    # duplicate registration of a *different* object must be refused
+    with pytest.raises(ValueError):
+        register(SuspSemantics(name="TESTREG",
+                               esusp=lambda xp, s, d, r, g, a: r))
+    # the host oracle accepts the name like any builtin
+    m = make_metric("TESTREG")
+    assert isinstance(m, DensityMetric)
+    sp = Spade(metric="TESTREG")
+    sp.LoadGraph([0, 1], [1, 2], [2.0, 4.0], n_vertices=3)
+    assert sp.graph.adj[0][1] == 6.0
+    # ... and the error message now names it
+    with pytest.raises(KeyError, match="TESTREG"):
+        make_metric("still-unknown")
+
+
+# ---------------------------------------------------------------------------
+# builtin parity with the legacy hardcoded formulas
+# ---------------------------------------------------------------------------
+
+
+def _legacy_seed(metric, src, dst, amt, n, C=5.0):
+    from repro.core.semantics import _QUANTUM
+
+    src, dst = np.asarray(src), np.asarray(dst)
+    in_deg = np.zeros(n, np.int64)
+    np.add.at(in_deg, dst, 1)
+    if metric == "DG":
+        w = np.ones(src.shape[0], np.float64)
+    elif metric == "DW":
+        w = np.maximum(np.asarray(amt, np.float64), 1e-12)
+    else:
+        w = 1.0 / np.log(in_deg[dst] + C)
+    return np.maximum(quantize_susp_array(w), _QUANTUM).astype(np.float32), in_deg
+
+
+@pytest.mark.parametrize("name", ["DG", "DW", "FD"])
+def test_seed_base_matches_legacy_formulas(name):
+    rng = np.random.default_rng(5)
+    n, m = 60, 400
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    amt = rng.lognormal(2.0, 1.0, m)
+    w_leg, d_leg = _legacy_seed(name, src, dst, amt, n)
+    w_new, d_new = resolve(name).seed_base(src, dst, amt, n)
+    np.testing.assert_array_equal(w_leg, w_new)
+    np.testing.assert_array_equal(d_leg, d_new)
+
+
+def test_fd_batch_weights_match_host_funnel_at_arrival():
+    """Device FD weighting == host FD esusp at arrival time, including
+    intra-batch degree evolution — through the semantics API."""
+    from repro.core.reference import AdjGraph
+
+    fd_host = make_metric("FD")
+    g = AdjGraph(6)
+    g.add_edge(0, 2, 1.0)
+    g.add_edge(1, 2, 1.0)
+    in_deg = jnp.zeros(6, jnp.int32).at[jnp.asarray([2, 2])].add(1)
+
+    batch = [(3, 2, 1.0), (4, 2, 1.0), (0, 5, 1.0)]
+    host_w = []
+    for u, v, raw in batch:
+        host_w.append(fd_host.edge_susp(u, v, raw, g))
+        g.add_edge(u, v, raw)
+    src = jnp.asarray([b[0] for b in batch], jnp.int32)
+    dst = jnp.asarray([b[1] for b in batch], jnp.int32)
+    raw = jnp.asarray([b[2] for b in batch], jnp.float32)
+    w, new_deg = FD.batch_weights(in_deg, src, dst, raw, jnp.ones(3, bool))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(host_w), rtol=1e-6)
+    assert int(new_deg[2]) == 4 and int(new_deg[5]) == 1
+    assert FD.uses_degree and not DW.uses_degree
+
+
+def test_vertex_priors_flow_through_seeding_and_host_funnel():
+    sem = SuspSemantics(
+        name="PRIOR",
+        esusp=lambda xp, s, d, raw, deg, aux: xp.ones_like(raw),
+        vsusp=lambda xp, ids, deg, aux: (ids % 4) * 1.0,
+    )
+    a = sem.seed_vertices(8, np.zeros(8, np.int64))
+    np.testing.assert_array_equal(a, np.float32([0, 1, 2, 3, 0, 1, 2, 3]))
+    m = sem.host_metric()
+    from repro.core.reference import AdjGraph
+
+    assert m.vertex_susp(3, AdjGraph(8)) == 3.0
+    # DG/DW/FD have no prior: services skip the buffer entirely
+    assert DG.seed_vertices(8, np.zeros(8, np.int64)) is None
+
+
+def test_spade_accepts_semantics_object_like_a_name():
+    stream_edges = ([0, 1, 2], [1, 2, 0], [2.0, 3.0, 4.0])
+    sp_name = Spade(metric="DW")
+    sp_sem = Spade(metric=DW)
+    for sp in (sp_name, sp_sem):
+        sp.LoadGraph(*stream_edges, n_vertices=3)
+    c1, g1 = sp_name.Detect()
+    c2, g2 = sp_sem.Detect()
+    np.testing.assert_array_equal(c1, c2)
+    assert g1 == g2
+
+
+# ---------------------------------------------------------------------------
+# the facade
+# ---------------------------------------------------------------------------
+
+
+def test_engine_spec_validation():
+    with pytest.raises(ValueError):
+        EngineSpec(plane="gpu")
+    with pytest.raises(ValueError):
+        EngineSpec(plane="host", window_ticks=4)
+    with pytest.raises(ValueError):
+        EngineSpec(batch_edges=0)
+    # DensityMetric is host-only: device planes need a SuspSemantics
+    with pytest.raises(TypeError):
+        SpadeService(make_metric("DW"), EngineSpec(plane="device"))
+
+
+def test_facade_device_matches_legacy_shim_bit_for_bit():
+    """The legacy run_device_service shim and the facade drive the same
+    loop; on DG (order-robust integer sums) the reports must agree
+    exactly, and the shim must warn."""
+    from repro.serve.device_service import run_device_service
+
+    stream = make_transaction_stream(n=800, m=4000, seed=21)
+    spec = EngineSpec(batch_edges=128, max_rounds=10, window_ticks=2,
+                      workset=True, predictive=False, min_bucket=64)
+    rep_new = SpadeService("DG", spec).run(stream)
+    with pytest.warns(SpadeDeprecationWarning):
+        rep_old = run_device_service(
+            stream, metric="DG", batch_edges=128, max_rounds=10,
+            window_ticks=2, workset=True, min_bucket=64,
+        )
+    assert rep_new.final_g == rep_old.final_g
+    assert rep_new.fraud_recall == rep_old.fraud_recall
+    assert rep_new.benign_fraction == rep_old.benign_fraction
+    assert rep_new.live_edges == rep_old.live_edges
+    assert rep_new.n_workset_ticks == rep_old.n_workset_ticks
+    # legacy mode never predicts
+    assert rep_old.n_predicted_ticks == 0
+
+
+def test_predictive_service_matches_synced_service():
+    """predictive=True must change only the dispatch mechanics (and the
+    telemetry), never the results."""
+    stream = make_transaction_stream(n=800, m=4000, seed=22)
+    kw = dict(batch_edges=128, max_rounds=10, window_ticks=2, workset=True,
+              min_bucket=64)
+    rep_sync = SpadeService("DG", EngineSpec(predictive=False, **kw)).run(stream)
+    rep_pred = SpadeService("DG", EngineSpec(predictive=True, **kw)).run(stream)
+    assert rep_pred.final_g == rep_sync.final_g
+    assert rep_pred.fraud_recall == rep_sync.fraud_recall
+    assert rep_pred.benign_fraction == rep_sync.benign_fraction
+    assert rep_pred.live_edges == rep_sync.live_edges
+    # every tick after the first dispatches without a count sync
+    assert rep_pred.n_predicted_ticks == rep_pred.n_ticks - 1
+    assert rep_sync.n_predicted_ticks == 0
+    assert (rep_pred.n_workset_ticks + rep_pred.n_fallback_ticks
+            == rep_pred.n_ticks)
+
+
+def test_facade_host_plane_matches_legacy_run_service():
+    from repro.serve.service import run_service
+
+    stream = make_transaction_stream(n=600, m=3000, seed=23)
+    spec = EngineSpec(plane="host", grouping=True, batch_edges=1,
+                      flush_every=0.5)
+    rep_new = SpadeService("DW", spec).run(stream)
+    with pytest.warns(SpadeDeprecationWarning):
+        rep_old = run_service(stream, metric="DW", edge_grouping=True,
+                              batch_size=1, flush_every=0.5)
+    assert rep_new.fraud_recall == rep_old.fraud_recall
+    assert rep_new.n_reorders == rep_old.n_reorders
+    assert rep_new.prevention_ratio == rep_old.prevention_ratio
+
+
+def test_custom_aux_semantics_runs_through_the_facade():
+    """An aux-using (timestamp-decayed) semantics — inexpressible under the
+    legacy metric: str API — serves end to end through the device plane."""
+    stream = make_transaction_stream(n=600, m=3000, seed=24)
+    horizon = float(stream.inc_time.max())
+    tau = max(horizon, 1e-6)
+    sem = SuspSemantics(
+        name="TDECAY-TEST",
+        esusp=lambda xp, s, d, raw, deg, t: (
+            xp.maximum(raw, 1e-12)
+            * 2.0 ** (-(horizon - (0.0 if t is None else t)) / tau)
+        ),
+        uses_aux=True,
+    )
+    rep = SpadeService(sem, EngineSpec(batch_edges=256, max_rounds=10,
+                                       window_ticks=2)).run(stream)
+    assert rep.n_ticks == -(-stream.inc_src.shape[0] // 256)
+    assert np.isfinite(rep.final_g) and rep.final_g > 0
+    assert rep.fraud_recall > 0
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_device_metrics_shims_warn_and_match():
+    with pytest.warns(SpadeDeprecationWarning):
+        from repro.core.device_metrics import dg_weights
+
+        np.testing.assert_array_equal(
+            np.asarray(dg_weights(jnp.asarray([2.0, 5.0]))), [1.0, 1.0]
+        )
+    with pytest.warns(SpadeDeprecationWarning):
+        from repro.core.device_metrics import seed_base_weights
+
+        w, deg = seed_base_weights("FD", [0, 1], [1, 2], [1.0, 1.0], 3)
+    w2, deg2 = FD.seed_base([0, 1], [1, 2], [1.0, 1.0], 3)
+    np.testing.assert_array_equal(w, w2)
+    np.testing.assert_array_equal(deg, deg2)
+    assert w[0] == pytest.approx(1.0 / math.log(1 + 5.0), rel=1e-6)

@@ -402,6 +402,42 @@ def test_auto_dispatch_falls_back_beyond_largest_bucket():
     assert_states_bit_identical(s_full, s_auto, tag="fallback")
 
 
+def test_predictive_dispatch_matches_fused_across_hit_miss_fallback():
+    """The predictive selector (buckets from the previous tick's counts,
+    device-side fit check) must stay bit-identical to the fused path on
+    a tick mix that covers: the synced first tick, predicted workset hits,
+    a bucket miss (suffix outgrows the prediction -> in-program fallback),
+    and re-anchoring after the miss."""
+    from repro.core.incremental import (
+        BucketPredictor,
+        insert_and_maintain_predictive,
+    )
+
+    g1, g2 = _boundary_graph(), _boundary_graph()
+    s_full = init_state(g1, eps=EPS)
+    s_pred = init_state(g2, eps=EPS)
+    predictor = BucketPredictor(g1.n_capacity, g1.e_capacity,
+                                min_bucket=FLOOR)
+    lv = np.where(np.asarray(g1.vertex_mask), np.asarray(s_full.level), -1)
+    hot = np.argsort(lv)[-8:]
+    cold = np.argsort(np.where(np.asarray(g1.vertex_mask),
+                               np.asarray(s_full.level), 99))[:8]
+    saw_predicted = saw_miss = False
+    for t, ids in enumerate([hot, hot, cold, hot, hot]):
+        bs = jnp.asarray(ids[:4], jnp.int32)
+        bd = jnp.asarray(ids[4:], jnp.int32)
+        bc = jnp.full(4, float(t + 1), jnp.float32)
+        valid = bs != bd
+        s_full = insert_and_maintain(s_full, bs, bd, bc, valid, eps=EPS)
+        s_pred, info = insert_and_maintain_predictive(
+            s_pred, bs, bd, bc, valid, predictor, eps=EPS
+        )
+        saw_predicted |= info.predicted
+        saw_miss |= info.miss
+        assert_states_bit_identical(s_full, s_pred, tag=f"pred-tick{t}")
+    assert saw_predicted and saw_miss
+
+
 def test_auto_dispatch_hot_suffix_takes_workset_path():
     """A batch confined to the highest-level vertices keeps the suffix
     small: the auto engine must take the workset path (no fallback) and
@@ -422,3 +458,181 @@ def test_auto_dispatch_hot_suffix_takes_workset_path():
     assert not info.fallback
     assert info.e_bucket >= FLOOR
     assert_states_bit_identical(s_full, s_auto, tag="hot")
+
+
+# ---------------------------------------------------------------------------
+# pluggable semantics: a user-defined (non-builtin) SuspSemantics must reach
+# every engine with no engine-file edits, bit-identically on integer weights
+# ---------------------------------------------------------------------------
+
+from repro.core.semantics import SuspSemantics  # noqa: E402
+
+# parity-boost semantics: odd src+dst doubles the amount; vertex prior
+# id % 3.  Integer-valued on integer inputs, so every f32/f64 sum is exact
+# and cross-plane equality is bit-level — and it is *not* DG/DW/FD.
+PARITY_SEM = SuspSemantics(
+    name="XPARITY",
+    esusp=lambda xp, src, dst, raw, deg, aux: raw * (1.0 + (src + dst) % 2),
+    vsusp=lambda xp, ids, deg, aux: (ids % 3) * 1.0,
+)
+
+
+def _brute_best_density_weighted(edges, a) -> float:
+    """Exhaustive argmax_g with vertex priors (f = Σa + Σc)."""
+    best = 0.0
+    for r in range(1, N + 1):
+        for S in itertools.combinations(range(N), r):
+            Sset = set(S)
+            f = sum(float(a[u]) for u in Sset)
+            f += sum(c for u, v, c in edges if u in Sset and v in Sset)
+            best = max(best, f / r)
+    return best
+
+
+def test_custom_semantics_cross_plane_differential():
+    """Per-tick bit-equality of a user-defined semantics across the host
+    oracle, single-device fused, single-device workset, and mesh-sharded
+    workset engines (acceptance criterion of the semantics-plane redesign).
+
+    The host oracle (``Spade`` maintained incrementally through the same
+    semantics, expiry via ``DeleteEdge``) pins the exact invariants the
+    device planes must track bit-for-bit on integer weights: the window's
+    edge multiset (through the host funnel's weighting), ``w0`` with
+    vertex priors included, and a conservative ``best_g``.  The three
+    device engines must agree on the *full state* — community included —
+    among themselves (community parity with the exact oracle is not
+    expected from the 2(1+eps) bulk engine)."""
+    import jax
+
+    from repro.core.incremental import insert_and_maintain_auto as _ins_auto
+    from repro.core.incremental import slide_and_maintain_auto as _sl_auto
+    from repro.dist.graph import (
+        init_sharded_state,
+        shard_graph,
+        sharded_insert_and_maintain_auto,
+        sharded_slide_and_maintain,
+    )
+
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 (forced host) devices")
+    mesh = jax.make_mesh((8,), ("data",))
+    sem = PARITY_SEM
+    rng = np.random.default_rng(1234)
+
+    def rand_batch(k):
+        out = []
+        for _ in range(k):
+            u, v = (int(x) for x in rng.integers(0, N, 2))
+            if u != v:
+                out.append((u, v, int(rng.integers(1, 6))))
+        return out
+
+    base = rand_batch(12) or [(0, 1, 2)]
+    ticks = [rand_batch(int(rng.integers(1, 4))) for _ in range(6)]
+    window = 2
+    B = 4
+
+    src = np.array([e[0] for e in base], np.int64)
+    dst = np.array([e[1] for e in base], np.int64)
+    amt = np.array([e[2] for e in base], np.float64)
+
+    # device seeding through the semantics' batch-seeding rule (the API —
+    # no engine knows the semantics' name)
+    base_w, in_deg = sem.seed_base(src, dst, amt, N)
+    a0 = sem.seed_vertices(N, in_deg)
+    mk = lambda: device_graph_from_coo(
+        N, src, dst, base_w, a=a0, n_capacity=V_CAP, e_capacity=E_CAP
+    )
+    state = init_state(mk(), eps=EPS)
+    state_ws = init_state(mk(), eps=EPS)
+    state_sh = init_sharded_state(shard_graph(mk(), mesh), mesh, eps=EPS)
+
+    # host oracle through the identical semantics (funnel-compiled)
+    sp = Spade(metric=sem)
+    sp.LoadGraph(src, dst, amt, n_vertices=N)
+    m = sp.metric
+
+    weight_fn = jax.jit(sem.batch_weights)
+    deg_dev = jnp.zeros(V_CAP, jnp.int32).at[: N].set(
+        jnp.asarray(in_deg, jnp.int32)
+    )
+    m_base = len(base)
+    ring: list[list[tuple[int, int, float]]] = []
+    slot_ids = jnp.arange(E_CAP, dtype=jnp.int32)
+
+    for t, batch in enumerate(ticks):
+        expired = ring.pop(0) if len(ring) >= window else []
+        drop = (slot_ids >= m_base) & (slot_ids < m_base + len(expired))
+        bs = np.zeros(B, np.int32)
+        bd = np.zeros(B, np.int32)
+        raw = np.zeros(B, np.float32)
+        valid = np.zeros(B, bool)
+        for k, (u, v, r) in enumerate(batch):
+            bs[k], bd[k], raw[k], valid[k] = u, v, r, True
+        bs_d, bd_d = jnp.asarray(bs), jnp.asarray(bd)
+        valid_d = jnp.asarray(valid)
+        w, deg_dev = weight_fn(deg_dev, bs_d, bd_d, jnp.asarray(raw), valid_d)
+
+        # host-funnel weights must equal the device weights bit-for-bit
+        host_w = [m.edge_susp(u, v, float(r), sp.graph) for u, v, r in batch]
+        np.testing.assert_array_equal(
+            np.asarray(w)[: len(batch)], np.asarray(host_w, np.float32)
+        )
+
+        # the three device engines take the identical tick
+        state = slide_and_maintain(state, drop, bs_d, bd_d, w, valid_d, eps=EPS)
+        state_ws, _ = _sl_auto(state_ws, drop, bs_d, bd_d, w, valid_d,
+                               eps=EPS, min_bucket=4)
+        state_sh = sharded_slide_and_maintain(
+            state_sh, drop, bs_d, bd_d, w, valid_d, mesh=mesh, eps=EPS
+        )
+        assert_states_bit_identical(state, state_ws, tag=f"sem-ws-tick{t}")
+        assert_states_bit_identical(state, state_sh, tag=f"sem-sh-tick{t}")
+
+        # host oracle: insert the batch, expire the window's oldest batch
+        sp.InsertBatchEdges([(u, v, float(r)) for u, v, r in batch])
+        for u, v, c in expired:
+            sp.DeleteEdge(u, v, c)
+        ring.append([(u, v, float(cw)) for (u, v, _), cw in zip(batch, host_w)])
+
+        mirror = [(u, v, float(c)) for (u, v), c in zip(
+            zip(src.tolist(), dst.tolist()), base_w.tolist())]
+        mirror += [e for b in ring for e in b]
+        # 1. window edge-multiset parity with the host mirror (exact)
+        assert live_edge_multiset(state) == sorted(mirror)
+        # 2. w0 (priors included) == host full-graph peeling weights
+        np.testing.assert_array_equal(
+            np.asarray(state.w0)[:N], peeling_weights_full(sp.graph)[:N]
+        )
+        # 3. conservative density bookkeeping under the custom semantics
+        comm = np.where(np.asarray(state.community))[0]
+        assert comm.size > 0
+        g_comm = (sum(float(a0[u]) for u in comm)
+                  + sum(c for u, v, c in mirror
+                        if u in set(comm) and v in set(comm))) / comm.size
+        assert float(state.best_g) <= g_comm + 1e-4
+        assert float(state.best_g) <= _brute_best_density_weighted(
+            mirror, a0) + 1e-4
+
+    # insert-only twin parity through the auto (workset) engines as well,
+    # sharded included
+    bs = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    bd = jnp.asarray([4, 5, 6, 7], jnp.int32)
+    raw = jnp.asarray([2.0, 3.0, 1.0, 4.0], jnp.float32)
+    valid = jnp.ones(4, bool)
+    w, deg_dev = weight_fn(deg_dev, bs, bd, raw, valid)
+    state = insert_and_maintain(state, bs, bd, w, valid, eps=EPS)
+    state_ws, _ = _ins_auto(state_ws, bs, bd, w, valid, eps=EPS, min_bucket=4)
+    state_sh, _ = sharded_insert_and_maintain_auto(
+        state_sh, bs, bd, w, valid, mesh=mesh, eps=EPS, min_bucket=4
+    )
+    assert_states_bit_identical(state, state_ws, tag="sem-final-insert-ws")
+    assert_states_bit_identical(state, state_sh, tag="sem-final-insert-sh")
+
+    # 4. refresh differential: scratch bulk peel of the survivors agrees
+    refreshed = full_refresh(state, eps=EPS)
+    scratch = bulk_peel(state.graph, eps=EPS)
+    np.testing.assert_array_equal(
+        np.asarray(refreshed.level), np.asarray(scratch.level)
+    )
+    assert float(refreshed.best_g) == float(scratch.best_g)
